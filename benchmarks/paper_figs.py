@@ -1,0 +1,148 @@
+"""Benchmarks mirroring the paper's tables/figures on the synthetic suite.
+
+Fig. 9  -> bench_decomposition : time / memory / I/O, all algorithms
+Fig. 3  -> bench_convergence   : per-iteration update counts collapse
+Fig. 10 -> bench_maintenance   : per-op insert/delete cost vs recompute
+Fig. 11/12 -> bench_scalability: vary |V| / |E| 20%..100%
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graph import make_dataset, CSRGraph
+from repro.core.imcore import imcore_peel
+from repro.core.emcore import emcore
+from repro.core.semicore import HostEngine, decompose
+from repro.core.maintenance import CoreMaintainer
+
+BLOCK = 4096
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def bench_decomposition(datasets=("dblp-sim", "youtube-sim", "wiki-sim",
+                                  "cpt-sim", "lj-sim", "orkut-sim"),
+                        run_emcore=True):
+    rows = []
+    for name in datasets:
+        g = make_dataset(name)
+        expect, t_im = _time(lambda: imcore_peel(g))
+        base = {
+            "dataset": name, "n": g.n, "m": g.m,
+            "kmax": int(expect.max()),
+            "imcore_s": t_im,
+            # IMCore holds the whole CSR + per-node state in memory
+            "imcore_mem_bytes": g.num_directed * 4 + (g.n + 1) * 8 + g.n * 16,
+        }
+        for algo in ("semicore", "semicore+", "semicore*"):
+            r, t = _time(lambda a=algo: decompose(g, a, "batch", BLOCK))
+            assert np.array_equal(r.core, expect), (name, algo)
+            key = algo.replace("*", "_star").replace("+", "_plus")
+            base[f"{key}_s"] = t
+            base[f"{key}_io_blocks"] = r.edge_block_reads
+            base[f"{key}_iters"] = r.iterations
+            base[f"{key}_computations"] = r.node_computations
+            base[f"{key}_mem_bytes"] = r.memory_bytes
+        if run_emcore:
+            r, t = _time(lambda: emcore(g, num_partitions=16,
+                                        memory_budget_edges=g.num_directed // 4,
+                                        block_edges=BLOCK))
+            assert np.array_equal(r.core, expect), (name, "emcore")
+            base["emcore_s"] = t
+            base["emcore_io_blocks"] = r.read_blocks + r.write_blocks
+            base["emcore_write_blocks"] = r.write_blocks
+            base["emcore_mem_bytes"] = r.peak_memory_bytes
+            base["emcore_over_budget_rounds"] = r.over_budget_rounds
+        rows.append(base)
+    return rows
+
+
+def bench_convergence(datasets=("twitter-sim", "uk-sim")):
+    """Fig. 3: number of nodes whose core changes, per iteration."""
+    rows = []
+    for name in datasets:
+        g = make_dataset(name)
+        r = decompose(g, "semicore", "batch", BLOCK)
+        rows.append({
+            "dataset": name, "iterations": r.iterations,
+            "updates_per_iter": r.updates_per_iter,
+            "first_iter_updates": r.updates_per_iter[0],
+            "late_iter_updates": int(np.mean(r.updates_per_iter[-5:])),
+        })
+    return rows
+
+
+def bench_maintenance(dataset="lj-sim", num_edges=100, seed=7):
+    """Fig. 10: avg per-op cost of SemiDelete*/SemiInsert/SemiInsert*."""
+    g = make_dataset(dataset)
+    rng = np.random.default_rng(seed)
+    e = g.edge_list()
+    picks = e[rng.choice(len(e), size=num_edges, replace=False)]
+
+    full = decompose(g, "semicore*", "batch", BLOCK)
+    m = CoreMaintainer(g, block_edges=BLOCK)
+
+    out = {"dataset": dataset, "num_ops": num_edges,
+           "full_decompose_io_blocks": full.edge_block_reads}
+    # deletions
+    t0 = time.perf_counter()
+    io = comp = 0
+    for u, v in picks:
+        s = m.delete_edge(int(u), int(v))
+        io += s.edge_block_reads
+        comp += s.node_computations
+    out["delete_star_avg_s"] = (time.perf_counter() - t0) / num_edges
+    out["delete_star_avg_io"] = io / num_edges
+    out["delete_star_avg_computations"] = comp / num_edges
+
+    # insertions (reinsert the same edges), both algorithms
+    for algo in ("semiinsert", "semiinsert*"):
+        m2 = CoreMaintainer(m.bg.materialize(), block_edges=BLOCK,
+                            state=(m.core, m.cnt))
+        t0 = time.perf_counter()
+        io = comp = 0
+        for u, v in picks:
+            s = m2.insert_edge(int(u), int(v), algorithm=algo)
+            io += s.edge_block_reads
+            comp += s.node_computations
+        key = algo.replace("*", "_star")
+        out[f"{key}_avg_s"] = (time.perf_counter() - t0) / num_edges
+        out[f"{key}_avg_io"] = io / num_edges
+        out[f"{key}_avg_computations"] = comp / num_edges
+    # correctness of the final state
+    final = m2.bg.materialize()
+    assert np.array_equal(m2.core, imcore_peel(final))
+    return out
+
+
+def bench_scalability(dataset="twitter-sim", fracs=(0.2, 0.4, 0.6, 0.8, 1.0)):
+    """Fig. 11/12: decomposition + maintenance cost vs |V| and |E| samples."""
+    g = make_dataset(dataset)
+    rows = []
+    for frac in fracs:
+        for mode in ("nodes", "edges"):
+            sub = g.sample_nodes(frac, seed=1) if mode == "nodes" else \
+                g.sample_edges(frac, seed=1)
+            rec = {"dataset": dataset, "mode": mode, "frac": frac,
+                   "n": sub.n, "m": sub.m}
+            for algo in ("semicore", "semicore*"):
+                r, t = _time(lambda a=algo: decompose(sub, a, "batch", BLOCK))
+                key = algo.replace("*", "_star")
+                rec[f"{key}_s"] = t
+                rec[f"{key}_io_blocks"] = r.edge_block_reads
+            m = CoreMaintainer(sub, block_edges=BLOCK)
+            e = sub.edge_list()
+            if len(e):
+                u, v = e[len(e) // 2]
+                _, t = _time(lambda: m.delete_edge(int(u), int(v)))
+                rec["delete_s"] = t
+                _, t = _time(lambda: m.insert_edge(int(u), int(v)))
+                rec["insert_star_s"] = t
+            rows.append(rec)
+    return rows

@@ -1,0 +1,143 @@
+"""§Roofline: assemble the per-cell roofline table from dry-run artifacts.
+
+Terms (per chip, seconds):
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (~50 GB/s ICI)
+
+plus MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE) / 2·N·D (serve)
+and the useful-compute ratio MODEL_FLOPS / (chips x HLO_FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _lm_model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config, SHAPES_BY_KIND
+    from repro.models.transformer import lm_param_specs, layer_groups
+    from repro.models.params import tree_num_params
+
+    cfg = get_config(arch)
+    specs = lm_param_specs(cfg)
+    total = tree_num_params(specs)
+    n_active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        L_moe = cfg.n_layers - m.first_k_dense
+        routed = L_moe * m.num_experts * 3 * cfg.d_model * m.d_ff_expert
+        n_active = total - routed * (1 - m.top_k / m.num_experts)
+    sh = SHAPES_BY_KIND["lm"][shape]
+    if sh["step"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n_active * tokens
+    if sh["step"] == "prefill":
+        return 2.0 * n_active * sh["global_batch"] * sh["seq_len"]
+    return 2.0 * n_active * sh["global_batch"]  # decode: one token / request
+
+
+def _gnn_model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config, SHAPES_BY_KIND
+
+    cfg = get_config(arch)
+    sh = SHAPES_BY_KIND["gnn"][shape]
+    d = cfg.d_hidden
+    if sh["mode"] == "full":
+        E, N, F = sh["n_edges"], sh["n_nodes"], sh["d_feat"]
+    elif sh["mode"] == "sampled":
+        B = sh["batch_nodes"]
+        f1, f2 = sh["fanout"]
+        N = B * (1 + f1 + f1 * f2)
+        E = 2 * (B * f1 + B * f1 * f2)
+        F = sh["d_feat"]
+    else:
+        N = sh["batch"] * sh["n_nodes"]
+        E = 2 * sh["batch"] * sh["n_edges"]
+        F = sh["d_feat"]
+    fwd = cfg.n_layers * (2 * E * d + 2 * N * d * max(F, d))
+    return 3.0 * fwd  # train ~ 3x forward
+
+
+def _recsys_model_flops(shape: str) -> float:
+    from repro.configs import get_config, SHAPES_BY_KIND
+
+    cfg = get_config("mind")
+    sh = SHAPES_BY_KIND["recsys"][shape]
+    B = sh["batch"]
+    D, K, L = cfg.embed_dim, cfg.n_interests, cfg.hist_len
+    routing = cfg.capsule_iters * 2 * B * K * L * D * 2
+    mlp = 2 * B * K * (2 * D * cfg.mlp_dim + cfg.mlp_dim * D)
+    f = routing + mlp + 2 * B * L * D * D
+    if sh["step"] == "train":
+        f = 3 * f + 2 * B * cfg.num_sampled_negatives * D * 3
+    if sh["step"] == "retrieval":
+        f += 2 * sh["n_candidates"] * K * D
+    return float(f)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    if arch.startswith("semicore"):
+        return 0.0
+    from repro.configs import get_config
+
+    kind = get_config(arch).kind
+    if kind == "lm":
+        return _lm_model_flops(arch, shape)
+    if kind == "gnn":
+        return _gnn_model_flops(arch, shape)
+    return _recsys_model_flops(shape)
+
+
+def load_table(mesh: str = "single_pod_16x16") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "ok": False})
+            continue
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = r["hlo_flops_per_chip"] * r["chips"]
+        roof = r["roofline"]
+        bound_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "ok": True,
+            "chips": r["chips"], "step": r["step"],
+            "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"], "dominant": roof["dominant"],
+            "model_flops": mf,
+            "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+            "roofline_fraction": (roof["compute_s"] / bound_s) if bound_s else 0.0,
+            "mfu_bound": (mf / r["chips"] / 197e12) / bound_s if bound_s else 0.0,
+            "hbm_bytes_per_chip": r["memory"]["argument_bytes"]
+            + r["memory"]["temp_bytes"],
+        })
+    return rows
+
+
+def print_table(mesh: str = "single_pod_16x16"):
+    rows = load_table(mesh)
+    hdr = (f"{'arch':<18} {'shape':<14} {'dom':<10} {'compute_s':>10} "
+           f"{'memory_s':>10} {'collect_s':>10} {'useful%':>8} {'MFUbound%':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if not r.get("ok"):
+            print(f"{r['arch']:<18} {r['shape']:<14} FAILED")
+            continue
+        print(f"{r['arch']:<18} {r['shape']:<14} {r['dominant']:<10} "
+              f"{r['compute_s']:>10.3e} {r['memory_s']:>10.3e} "
+              f"{r['collective_s']:>10.3e} {100 * r['useful_ratio']:>7.1f}% "
+              f"{100 * r['mfu_bound']:>8.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "single_pod_16x16")

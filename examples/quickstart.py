@@ -1,0 +1,38 @@
+"""Quickstart: core decomposition with the paper's three semi-external
+algorithms on the paper's own running example (Fig. 1) + a synthetic graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.graph import paper_example_graph, chung_lu
+from repro.core import decompose, imcore_bz, CoreMaintainer
+
+# --- the paper's Fig. 1 graph -----------------------------------------------
+g = paper_example_graph()
+print("Fig. 1 graph:", g.n, "nodes,", g.m, "edges")
+for algo in ("semicore", "semicore+", "semicore*"):
+    r = decompose(g, algo, schedule="seq", block_edges=16)
+    print(f"  {algo:<10} cores={r.core.tolist()} iters={r.iterations} "
+          f"computations={r.node_computations}")
+# SemiCore:36, SemiCore+:23, SemiCore*:11 — exactly Examples 4.1/4.2/4.3.
+
+# --- a power-law graph, all engines agree ------------------------------------
+g = chung_lu(50_000, 400_000, seed=0)
+ref = imcore_bz(g)
+r = decompose(g, "semicore*", schedule="batch")
+assert np.array_equal(r.core, ref)
+print(f"\nchung_lu(50k, 400k): kmax={r.kmax} iters={r.iterations} "
+      f"I/O={r.edge_block_reads} blocks  memory={r.memory_bytes / 1e6:.1f} MB "
+      f"(vs in-memory CSR {(g.num_directed * 4 + g.n * 24) / 1e6:.1f} MB)")
+
+# --- maintain under updates ---------------------------------------------------
+m = CoreMaintainer(g)
+e = g.edge_list()[12345]
+s = m.delete_edge(int(e[0]), int(e[1]))
+print(f"delete edge: {s.node_computations} computations, "
+      f"{s.edge_block_reads} I/Os, {s.num_changed} cores changed")
+s = m.insert_edge(int(e[0]), int(e[1]))
+print(f"insert edge: {s.node_computations} computations, "
+      f"{s.edge_block_reads} I/Os, {s.num_changed} cores changed")
+print("cores back to original:", np.array_equal(m.core, ref))

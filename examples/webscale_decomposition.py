@@ -1,0 +1,56 @@
+"""Web-scale-style decomposition: on-disk graph, SPMD engine, checkpoint/restart.
+
+The end-to-end driver for the paper's workload: builds an RMAT web-crawl-like
+graph, stores it as the on-disk node/edge tables, decomposes it with the
+distributed engine, checkpoints mid-run, and proves a warm restart converges
+to the same fixpoint (monotone upper bounds = free crash consistency).
+
+    PYTHONPATH=src python examples/webscale_decomposition.py
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.graph import rmat, CSRGraph
+from repro.core import imcore_peel, decompose
+from repro.core.distributed import distributed_decompose, shard_graph, build_decompose_fn
+from repro.train import save, restore
+
+workdir = tempfile.mkdtemp(prefix="webscale_")
+
+# 1) build + store the graph on disk (the paper's edge/node tables)
+g = rmat(17, 12, seed=3)   # 131k nodes, ~1.4M directed edges, heavy skew
+g.save(os.path.join(workdir, "graph"))
+g = CSRGraph.load(os.path.join(workdir, "graph"), mmap=True)  # edges on disk
+print(f"graph: n={g.n:,} 2m={g.num_directed:,} (memmapped from disk)")
+
+# 2) host OOC engine (the faithful semi-external reproduction)
+t0 = time.time()
+r = decompose(g, "semicore*", "batch")
+print(f"SemiCore* (OOC host): kmax={r.kmax} iters={r.iterations} "
+      f"I/O={r.edge_block_reads} blocks in {time.time() - t0:.2f}s; "
+      f"node-state memory {r.memory_bytes / 1e6:.1f} MB")
+
+# 3) SPMD engine + mid-run checkpoint/restart
+expect = imcore_peel(g)
+core, iters = distributed_decompose(g)
+assert np.array_equal(core, expect)
+print(f"SPMD engine: {iters} supersteps — matches IMCore")
+
+# simulate a crash: run a budgeted prefix, checkpoint, restart warm
+import jax
+from jax.sharding import Mesh
+mesh = Mesh(np.array(jax.devices()).reshape(-1), ("shard",))
+sg = shard_graph(g, 1)
+fn = build_decompose_fn(mesh, sg.n, sg.num_probes, max_supersteps=max(2, iters // 2))
+partial_core, done = fn(sg.deg.astype(np.int32), sg.dst, sg.rows,
+                        sg.edge_mask, sg.owned_ids, sg.owned_mask)
+save(workdir, int(done), {"core": np.asarray(partial_core)})
+print(f"checkpointed after {int(done)} supersteps (upper bounds still valid)")
+
+(state, step) = restore(workdir, {"core": np.zeros(g.n, np.int32)})
+core2, extra = distributed_decompose(g, core0=state["core"])
+assert np.array_equal(core2, expect)
+print(f"warm restart finished in {extra} further supersteps — exact result")

@@ -1,0 +1,7 @@
+from .base import LMConfig, GNNConfig, RecsysConfig, CoreGraphConfig, MoEConfig, MLAConfig
+from .registry import get_config, ARCH_IDS
+from .shapes import SHAPES_BY_KIND, shape_names, input_specs
+
+__all__ = ["LMConfig", "GNNConfig", "RecsysConfig", "CoreGraphConfig",
+           "MoEConfig", "MLAConfig", "get_config", "ARCH_IDS",
+           "SHAPES_BY_KIND", "shape_names", "input_specs"]

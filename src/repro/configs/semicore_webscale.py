@@ -1,0 +1,11 @@
+"""The paper's own workload at Table-I scale: Clueweb / UK / Twitter-sized
+semi-external core decomposition cells (directed edge counts = 2m)."""
+from .base import CoreGraphConfig
+
+CLUEWEB = CoreGraphConfig(name="semicore-clueweb", n=978_408_098,
+                          m_directed=85_148_214_938, max_deg=75_611_696)
+UK = CoreGraphConfig(name="semicore-uk", n=105_896_555,
+                     m_directed=7_477_467_296, max_deg=975_419)
+TWITTER = CoreGraphConfig(name="semicore-twitter", n=41_652_230,
+                          m_directed=2_936_730_364, max_deg=2_997_487)
+CONFIG = CLUEWEB

@@ -1,0 +1,174 @@
+"""Per-family shape cells + input_specs(): ShapeDtypeStruct stand-ins for
+every model input of every (arch x shape) cell — shardable, no allocation.
+
+Cell inventory (40): 5 LM archs x 4 shapes, 4 GNN archs x 4 shapes,
+1 recsys arch x 4 shapes.  Extra: the paper's own web-scale decomposition
+cells (semicore-webscale) ride the same machinery.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import LMConfig, GNNConfig, RecsysConfig, CoreGraphConfig
+
+I32, F32 = jnp.int32, jnp.float32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# --------------------------------------------------------------------- LM
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, step="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, step="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, step="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, step="decode"),
+}
+
+# ------------------------------------------------------------------- GNN
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                          step="train", mode="full"),
+    "minibatch_lg": dict(n_nodes=232_965, n_edges=114_615_892,
+                         batch_nodes=1024, fanout=(15, 10), d_feat=602,
+                         step="train", mode="sampled"),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+                         step="train", mode="full"),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16,
+                     step="train", mode="molecule"),
+}
+
+# ---------------------------------------------------------------- recsys
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, step="train"),
+    "serve_p99": dict(batch=512, step="serve"),
+    "serve_bulk": dict(batch=262_144, step="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, step="retrieval"),
+}
+
+# ------------------------------------------------- paper's own workload
+COREGRAPH_SHAPES = {
+    "decompose": dict(step="decompose"),
+}
+
+SHAPES_BY_KIND = {
+    "lm": LM_SHAPES,
+    "gnn": GNN_SHAPES,
+    "recsys": RECSYS_SHAPES,
+    "coregraph": COREGRAPH_SHAPES,
+}
+
+
+def shape_names(cfg) -> list[str]:
+    return list(SHAPES_BY_KIND[cfg.kind])
+
+
+# ---------------------------------------------------------------- specs
+def _lm_specs(cfg: LMConfig, sh: dict, reduced: bool):
+    from ..models.transformer import make_kv_cache_specs
+
+    B, S = sh["global_batch"], sh["seq_len"]
+    if reduced:
+        B, S = min(B, 2), min(S, 64)
+    if sh["step"] == "train":
+        return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    if sh["step"] == "prefill":
+        return {"tokens": _sds((B, S), I32)}
+    # decode: one new token against a cache of length seq_len
+    return {
+        "tokens": _sds((B, 1), I32),
+        "caches": make_kv_cache_specs(cfg, B, S),
+    }
+
+
+def _gnn_specs(cfg: GNNConfig, sh: dict, reduced: bool):
+    mode = sh["mode"]
+    if mode == "full":
+        N, E, F = sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+        if reduced:
+            N, E, F = 64, 256, 8
+        # pad the edge axis to a shardable multiple; padded edges point at a
+        # dummy sink node N (losses only read real rows)
+        E = -(-E // 512) * 512
+        N = N + 1
+        batch = {"src": _sds((E,), I32), "dst": _sds((E,), I32)}
+        if cfg.arch == "schnet":
+            batch |= {"z": _sds((N,), I32), "pos": _sds((N, 3), F32),
+                      "y": _sds((N,), F32)}
+        elif cfg.arch == "egnn":
+            batch |= {"x": _sds((N, F), F32), "pos": _sds((N, 3), F32),
+                      "y": _sds((N,), F32)}
+        else:
+            batch |= {"x": _sds((N, F), F32), "labels": _sds((N - 1,), I32)}
+        return batch, N
+    if mode == "sampled":
+        B = sh["batch_nodes"]
+        f1, f2 = sh["fanout"]
+        F = sh["d_feat"]
+        if reduced:
+            B, f1, f2, F = 8, 3, 2, 8
+        N = B * (1 + f1 + f1 * f2)     # flattened sampled subgraph, seeds first
+        E = 2 * (B * f1 + B * f1 * f2)  # both directions
+        batch = {"src": _sds((E,), I32), "dst": _sds((E,), I32)}
+        if cfg.arch == "schnet":
+            batch |= {"z": _sds((N,), I32), "pos": _sds((N, 3), F32),
+                      "y": _sds((B,), F32)}
+        elif cfg.arch == "egnn":
+            batch |= {"x": _sds((N, F), F32), "pos": _sds((N, 3), F32),
+                      "y": _sds((B,), F32)}
+        else:
+            batch |= {"x": _sds((N, F), F32), "labels": _sds((B,), I32)}
+        return batch, N
+    # molecule: disjoint union of `batch` small graphs
+    G = sh["batch"] if not reduced else 4
+    n1, e1, F = sh["n_nodes"], sh["n_edges"], sh["d_feat"]
+    N, E = G * n1, G * e1 * 2
+    batch = {"src": _sds((E,), I32), "dst": _sds((E,), I32),
+             "graph_ids": _sds((N,), I32), "y": _sds((G,), F32)}
+    if cfg.arch == "schnet":
+        batch |= {"z": _sds((N,), I32), "pos": _sds((N, 3), F32)}
+    elif cfg.arch == "egnn":
+        batch |= {"x": _sds((N, F), F32), "pos": _sds((N, 3), F32)}
+    else:
+        batch |= {"x": _sds((N, F), F32)}
+        batch["labels"] = _sds((G,), I32)
+        del batch["y"]
+    return batch, N
+
+
+def _recsys_specs(cfg: RecsysConfig, sh: dict, reduced: bool):
+    B = sh["batch"] if not reduced else 4
+    base = {
+        "hist_ids": _sds((B, cfg.hist_len), I32),
+        "profile_ids": _sds((B, cfg.n_profile_fields, cfg.profile_bag), I32),
+    }
+    if sh["step"] == "train":
+        base |= {"target_id": _sds((B,), I32),
+                 "negative_ids": _sds((B, cfg.num_sampled_negatives), I32)}
+    if sh["step"] == "retrieval":
+        C = sh["n_candidates"] if not reduced else 64
+        base |= {"candidate_ids": _sds((C,), I32)}
+    return base
+
+
+def input_specs(cfg, shape_name: str, *, num_shards: int = 1,
+                reduced: bool = False):
+    """Returns (step_kind, avals).  For GNN cells avals include num_nodes."""
+    sh = SHAPES_BY_KIND[cfg.kind][shape_name]
+    if cfg.kind == "lm":
+        return sh["step"], _lm_specs(cfg, sh, reduced)
+    if cfg.kind == "gnn":
+        batch, N = _gnn_specs(cfg, sh, reduced)
+        return sh["step"], {"batch": batch, "num_nodes": N}
+    if cfg.kind == "recsys":
+        return sh["step"], _recsys_specs(cfg, sh, reduced)
+    if cfg.kind == "coregraph":
+        from ..core.distributed import sharded_graph_specs
+        c: CoreGraphConfig = cfg
+        specs, probes, V = sharded_graph_specs(c.n, c.m_directed, num_shards,
+                                               c.max_deg)
+        specs["core0"] = _sds((c.n,), I32)
+        return "decompose", {"specs": specs, "num_probes": probes}
+    raise ValueError(cfg.kind)

@@ -1,0 +1,13 @@
+"""The paper's contribution: semi-external core decomposition + maintenance."""
+from .imcore import imcore_bz, imcore_peel
+from .emcore import emcore, EMCoreResult
+from .localcore import local_core, h_index_batch, compute_cnt_batch
+from .semicore import HostEngine, DecompResult, decompose
+from .maintenance import CoreMaintainer, MaintStats
+
+__all__ = [
+    "imcore_bz", "imcore_peel", "emcore", "EMCoreResult",
+    "local_core", "h_index_batch", "compute_cnt_batch",
+    "HostEngine", "DecompResult", "decompose",
+    "CoreMaintainer", "MaintStats",
+]

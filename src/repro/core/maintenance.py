@@ -1,0 +1,281 @@
+"""I/O-efficient core maintenance (paper §V): SemiDelete* (Alg. 6),
+SemiInsert (Alg. 7), SemiInsert* (Alg. 8).
+
+All three run over the same blocked storage + edge-update memory buffer
+(§V.A *Graph Maintenance*) and keep the decomposition state (core, cnt)
+exact after every operation, so maintenance ops chain indefinitely.
+
+Algorithm 8 bookkeeping note (the pseudocode is ambiguous between two
+readings of its lines 11-12 / 22-25; we resolved it against the exact cnt
+trace of Example 5.3):  a ○-status node's cnt follows the *predictive*
+Eq. 4 (cnt*) — it already counts every still-promising core==c_old
+candidate, so a neighbor's ?→○ promotion must NOT increment it (only
+Eq.2-maintained nodes, i.e. core==c_old+1 originals, get +1), and a
+neighbor's ○→✕ flip decrements Eq.2-maintained nodes via the
+core==c_old+1 loop and ○ nodes via the status==○ loop, once each.  With
+this reading the final cnt values are exactly Eq. 2 w.r.t. the new cores
+(verified by tests against recomputation-from-scratch).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
+from ..graph.updates import BufferedGraph
+from .semicore import HostEngine
+
+__all__ = ["MaintStats", "CoreMaintainer"]
+
+_PHI, _Q, _CIRC, _CROSS = 0, 1, 2, 3
+
+
+@dataclass
+class MaintStats:
+    algorithm: str
+    node_computations: int
+    edge_block_reads: int
+    node_table_reads: int
+    iterations: int
+    num_changed: int
+
+
+class CoreMaintainer:
+    """Holds (core, cnt) over a BufferedGraph; applies edge updates."""
+
+    def __init__(
+        self,
+        graph,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        state: tuple[np.ndarray, np.ndarray] | None = None,
+    ):
+        self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
+        self.engine = HostEngine(self.bg, block_edges)
+        if state is None:
+            r = self.engine.semicore_star("seq")
+            self.core, self.cnt = r.core, r.cnt
+        else:
+            self.core = np.asarray(state[0], dtype=np.int64).copy()
+            self.cnt = np.asarray(state[1], dtype=np.int64).copy()
+
+    # ------------------------------------------------------------------ utils
+    def _io_snapshot(self):
+        return (self.engine.reader.reads, self.engine.reader.node_table_reads)
+
+    def _io_delta(self, snap):
+        return (
+            self.engine.reader.reads - snap[0],
+            self.engine.reader.node_table_reads - snap[1],
+        )
+
+    # =====================================================================
+    # Algorithm 6: SemiDelete*
+    # =====================================================================
+    def delete_edge(self, u: int, v: int) -> MaintStats:
+        if not self.bg.delete_edge(u, v):
+            raise KeyError(f"edge ({u}, {v}) does not exist")
+        snap = self._io_snapshot()
+        old_core = self.core.copy()
+        cu, cv = int(self.core[u]), int(self.core[v])
+        if cu < cv:
+            self.cnt[u] -= 1
+            rng = (u, u)
+        elif cv < cu:
+            self.cnt[v] -= 1
+            rng = (v, v)
+        else:
+            self.cnt[u] -= 1
+            self.cnt[v] -= 1
+            rng = (min(u, v), max(u, v))
+        r = self.engine.semicore_star(
+            "seq", core=self.core, cnt=self.cnt, vrange=rng
+        )
+        self.core, self.cnt = r.core, r.cnt
+        io = self._io_delta(snap)
+        return MaintStats(
+            "semidelete*",
+            r.node_computations,
+            io[0],
+            io[1],
+            r.iterations,
+            int((self.core != old_core).sum()),
+        )
+
+    # =====================================================================
+    # Algorithm 7: SemiInsert (two-phase)
+    # =====================================================================
+    def insert_edge(self, u: int, v: int, algorithm: str = "semiinsert*") -> MaintStats:
+        if algorithm == "semiinsert*":
+            return self._insert_star(u, v)
+        return self._insert_two_phase(u, v)
+
+    def _insert_common(self, u: int, v: int):
+        """Alg. 7 lines 1-5 (shared with Alg. 8)."""
+        if not self.bg.insert_edge(u, v):
+            raise KeyError(f"edge ({u}, {v}) already exists")
+        if self.core[u] > self.core[v]:
+            u, v = v, u
+        self.cnt[u] += 1
+        if self.core[v] == self.core[u]:
+            self.cnt[v] += 1
+        return u, v, int(self.core[u])
+
+    def _insert_two_phase(self, u0: int, v0: int) -> MaintStats:
+        snap = self._io_snapshot()
+        old_core = self.core.copy()
+        core, cnt, eng = self.core, self.cnt, self.engine
+        n = eng.n
+        u, v, c_old = self._insert_common(u0, v0)
+
+        # --- phase 1: grow + optimistically promote the candidate set -------
+        active = np.zeros(n, dtype=bool)
+        active[u] = True
+        vmin = vmax = u
+        comp = 0
+        iters = 0
+        update = True
+        while update:
+            update = False
+            iters += 1
+            nvmin, nvmax = n - 1, 0
+            scan_lo = vmin
+            w = vmin
+            while w <= vmax:
+                if active[w] and core[w] == c_old:
+                    core[w] = c_old + 1
+                    nbrs = eng.nbrs(w)
+                    comp += 1
+                    ncores = core[nbrs]
+                    cnt[w] = int((ncores >= c_old + 1).sum())
+                    bumped = nbrs[ncores == c_old + 1]  # lines 15-16 (Eq. 2)
+                    if len(bumped):
+                        np.add.at(cnt, bumped, 1)
+                    for x in nbrs[ncores == c_old]:  # lines 17-20
+                        x = int(x)
+                        if not active[x]:
+                            active[x] = True
+                            if x > vmax:
+                                vmax = x
+                            if x < w:
+                                update = True
+                                nvmin = min(nvmin, x)
+                                nvmax = max(nvmax, x)
+                w += 1
+            eng.reader.account_node_table_scan(scan_lo, vmax)
+            vmin, vmax = nvmin, nvmax
+
+        # --- phase 2: settle with Algorithm 5 (lines 22-25) -----------------
+        act = np.flatnonzero(active)
+        rng = (min(int(act.min()), u), max(int(act.max()), u))
+        r = eng.semicore_star("seq", core=core, cnt=cnt, vrange=rng)
+        self.core, self.cnt = r.core, r.cnt
+        io = self._io_delta(snap)
+        return MaintStats(
+            "semiinsert",
+            comp + r.node_computations,
+            io[0],
+            io[1],
+            iters + r.iterations,
+            int((self.core != old_core).sum()),
+        )
+
+    # =====================================================================
+    # Algorithm 8: SemiInsert* (one-phase status machine)
+    # =====================================================================
+    def _insert_star(self, u0: int, v0: int) -> MaintStats:
+        snap = self._io_snapshot()
+        old_core = self.core.copy()
+        core, cnt, eng = self.core, self.cnt, self.engine
+        n = eng.n
+        u, v, c_old = self._insert_common(u0, v0)
+
+        status = np.full(n, _PHI, dtype=np.uint8)
+        status[u] = _Q
+        vmin = vmax = u
+        comp = 0
+        iters = 0
+        update = True
+        while update:
+            update = False
+            iters += 1
+            nvmin, nvmax = n - 1, 0
+            scan_lo = vmin
+            w = vmin
+            while w <= vmax:
+                nbrs = None
+                if status[w] == _Q:
+                    nbrs = eng.nbrs(w)
+                    comp += 1
+                    # ComputeCnt* (Eq. 4; lines 29-33)
+                    ncores = core[nbrs]
+                    nst = status[nbrs]
+                    cnt[w] = int(
+                        (
+                            (ncores > c_old)
+                            | (
+                                (ncores == c_old)
+                                & (cnt[nbrs] >= c_old + 1)
+                                & (nst != _CROSS)
+                            )
+                        ).sum()
+                    )
+                    status[w] = _CIRC
+                    core[w] = c_old + 1
+                    # lines 11-12: Eq.2-maintained peers gain w
+                    bumped = nbrs[(ncores == c_old + 1) & (nst != _CIRC)]
+                    if len(bumped):
+                        np.add.at(cnt, bumped, 1)
+                    if cnt[w] >= c_old + 1:  # lines 13-17: expand
+                        cand = nbrs[
+                            (ncores == c_old)
+                            & (cnt[nbrs] >= c_old + 1)
+                            & (nst == _PHI)
+                        ]
+                        for x in cand:
+                            x = int(x)
+                            status[x] = _Q
+                            if x > vmax:
+                                vmax = x
+                            if x < w:
+                                update = True
+                                nvmin = min(nvmin, x)
+                                nvmax = max(nvmax, x)
+                if status[w] == _CIRC and cnt[w] < c_old + 1:  # lines 18-27
+                    if nbrs is None:
+                        nbrs = eng.nbrs(w)
+                        comp += 1
+                    ncores = core[nbrs]
+                    cnt[w] = int((ncores >= c_old).sum())  # ComputeCnt(nbr, c_old)
+                    status[w] = _CROSS
+                    core[w] = c_old
+                    nst = status[nbrs]
+                    # lines 22-23: Eq.2-maintained peers lose w ...
+                    dec = nbrs[(ncores == c_old + 1) & (nst != _CIRC)]
+                    if len(dec):
+                        np.subtract.at(cnt, dec, 1)
+                    # lines 24-27: ... and ○ nodes lose a promising candidate
+                    circ = nbrs[nst == _CIRC]
+                    for x in circ:
+                        x = int(x)
+                        cnt[x] -= 1
+                        if cnt[x] < c_old + 1:
+                            if x > vmax:
+                                vmax = x
+                            if x < w:
+                                update = True
+                                nvmin = min(nvmin, x)
+                                nvmax = max(nvmax, x)
+                w += 1
+            eng.reader.account_node_table_scan(scan_lo, vmax)
+            vmin, vmax = nvmin, nvmax
+
+        io = self._io_delta(snap)
+        return MaintStats(
+            "semiinsert*",
+            comp,
+            io[0],
+            io[1],
+            iters,
+            int((self.core != old_core).sum()),
+        )

@@ -1,0 +1,5 @@
+from .pipeline import (TokenSource, GNNFullGraphSource, SampledGraphSource,
+                       RecsysSource, Prefetcher)
+
+__all__ = ["TokenSource", "GNNFullGraphSource", "SampledGraphSource",
+           "RecsysSource", "Prefetcher"]

@@ -1,0 +1,172 @@
+"""Host data pipelines: deterministic synthetic sources + bounded prefetch.
+
+Straggler-mitigation story at pod scale: all sources are *indexable by step*
+(stateless), so any host can produce any step's batch — a restarted/replaced
+host resumes from the step counter alone, and the prefetch queue bounds how
+far a slow producer can fall behind before backpressure.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+__all__ = ["TokenSource", "GNNFullGraphSource", "SampledGraphSource",
+           "RecsysSource", "Prefetcher"]
+
+
+class TokenSource:
+    """Synthetic LM token stream: batch(step) is a pure function of step.
+
+    Tokens follow a noisy deterministic bigram process (t+1 = a*t+c mod V with
+    p=0.9) so the loss has learnable structure — train loops demonstrably
+    descend toward the process entropy.
+    """
+
+    def __init__(self, batch: int, seq: int, vocab: int, seed: int = 0,
+                 noise: float = 0.1):
+        self.batch, self.seq, self.vocab, self.seed = batch, seq, vocab, seed
+        self.noise = noise
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        B, S, V = self.batch, self.seq + 1, self.vocab
+        toks = np.empty((B, S), dtype=np.int64)
+        toks[:, 0] = rng.integers(0, V, B)
+        flip = rng.random((B, S)) < self.noise
+        rand = rng.integers(0, V, (B, S))
+        for t in range(1, S):
+            nxt = (toks[:, t - 1] * 31 + 7) % V
+            toks[:, t] = np.where(flip[:, t], rand[:, t], nxt)
+        toks = toks.astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class GNNFullGraphSource:
+    """Full-graph batch (same graph every step) with synthetic features."""
+
+    def __init__(self, graph, d_feat: int, num_classes: int, arch: str,
+                 seed: int = 0, core_order: bool = False, pad_nodes: int = 0):
+        rng = np.random.default_rng(seed)
+        if core_order:
+            # degeneracy-order relabeling (the paper's ordering as a
+            # locality-improving preprocessing step; DESIGN.md §8)
+            from ..core.imcore import imcore_peel
+            order = np.argsort(-imcore_peel(graph), kind="stable")
+            perm = np.empty(graph.n, dtype=np.int64)
+            perm[order] = np.arange(graph.n)
+            graph = graph.relabel(perm)
+        self.graph = graph
+        src, dst = graph.directed_pairs()
+        self.batch = {"src": src.astype(np.int32), "dst": np.asarray(dst, np.int32)}
+        n = graph.n
+        if arch == "schnet":
+            self.batch |= {"z": rng.integers(1, 90, n).astype(np.int32),
+                           "pos": rng.normal(size=(n, 3)).astype(np.float32),
+                           "y": rng.normal(size=n).astype(np.float32)}
+        elif arch == "egnn":
+            self.batch |= {"x": rng.normal(size=(n, d_feat)).astype(np.float32),
+                           "pos": rng.normal(size=(n, 3)).astype(np.float32),
+                           "y": rng.normal(size=n).astype(np.float32)}
+        else:
+            self.batch |= {"x": rng.normal(size=(n, d_feat)).astype(np.float32),
+                           "labels": rng.integers(0, num_classes, n).astype(np.int32)}
+        if pad_nodes:  # specs reserve dummy sink rows
+            for k in ("x", "z", "pos", "y"):
+                if k in self.batch:
+                    pad = np.zeros((pad_nodes,) + self.batch[k].shape[1:],
+                                   self.batch[k].dtype)
+                    self.batch[k] = np.concatenate([self.batch[k], pad])
+
+    def __call__(self, step: int) -> dict:
+        return self.batch
+
+
+class SampledGraphSource:
+    """minibatch_lg: real two-hop neighbor sampling -> flattened subgraph."""
+
+    def __init__(self, graph, d_feat: int, num_classes: int, batch_nodes: int,
+                 fanout=(15, 10), seed: int = 0):
+        from ..graph.sampler import NeighborSampler
+
+        self.graph = graph
+        self.sampler = NeighborSampler(graph, seed)
+        self.d_feat, self.num_classes = d_feat, num_classes
+        self.batch_nodes, self.fanout = batch_nodes, fanout
+        rng = np.random.default_rng(seed)
+        self.features = rng.normal(size=(graph.n, d_feat)).astype(np.float32)
+        self.labels = rng.integers(0, num_classes, graph.n).astype(np.int32)
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng((17, step))
+        seeds = rng.integers(0, self.graph.n, self.batch_nodes)
+        blocks = self.sampler.sample_batch(seeds, self.fanout)
+        b1, b2 = blocks
+        B, f1 = b1.neighbors.shape
+        f2 = b2.neighbors.shape[1]
+        # flattened node set: [seeds | hop1 | hop2], seeds first
+        nodes = np.concatenate(
+            [seeds, b1.neighbors.reshape(-1), b2.neighbors.reshape(-1)])
+        # local edges: hop1 -> seed, hop2 -> hop1 (both directions)
+        h1 = B + np.arange(B * f1)
+        h2 = B + B * f1 + np.arange(B * f1 * f2)
+        s1 = np.repeat(np.arange(B), f1)
+        s2 = np.repeat(h1, f2)
+        src = np.concatenate([h1, s1, h2, s2]).astype(np.int32)
+        dst = np.concatenate([s1, h1, s2, h2]).astype(np.int32)
+        return {
+            "x": self.features[nodes],
+            "src": src, "dst": dst,
+            "labels": self.labels[seeds],
+        }
+
+
+class RecsysSource:
+    """Synthetic MIND batches: history, profile bags, target + negatives."""
+
+    def __init__(self, cfg, batch: int, seed: int = 0):
+        self.cfg, self.batch, self.seed = cfg, batch, seed
+
+    def __call__(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng((self.seed, step))
+        return {
+            "hist_ids": rng.integers(-1, c.n_items, (self.batch, c.hist_len)).astype(np.int32),
+            "profile_ids": rng.integers(
+                0, c.profile_vocab,
+                (self.batch, c.n_profile_fields, c.profile_bag)).astype(np.int32),
+            "target_id": rng.integers(0, c.n_items, self.batch).astype(np.int32),
+            "negative_ids": rng.integers(
+                0, c.n_items, (self.batch, c.num_sampled_negatives)).astype(np.int32),
+        }
+
+
+class Prefetcher:
+    """Bounded background prefetch of step-indexed batches."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source(step)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,10 @@
+from .storage import CSRGraph, BlockReader, paper_example_graph, DEFAULT_BLOCK_EDGES
+from .generators import chung_lu, rmat, erdos_renyi, ba, make_dataset, DATASET_SUITE
+from .updates import BufferedGraph
+from .sampler import NeighborSampler, SampledBlock
+
+__all__ = [
+    "CSRGraph", "BlockReader", "paper_example_graph", "DEFAULT_BLOCK_EDGES",
+    "chung_lu", "rmat", "erdos_renyi", "ba", "make_dataset", "DATASET_SUITE",
+    "BufferedGraph", "NeighborSampler", "SampledBlock",
+]

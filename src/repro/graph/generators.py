@@ -1,0 +1,101 @@
+"""Synthetic graph generators standing in for the paper's dataset suite (Table I).
+
+The paper's 12 datasets (DBLP .. Clueweb) cannot ship with this repo; we generate
+graphs with matching *structural regimes* instead:
+
+  * ``chung_lu``  -- power-law expected-degree graphs (social-network-like);
+  * ``rmat``      -- Kronecker/R-MAT graphs (web-crawl-like, heavy skew; Graph500);
+  * ``erdos_renyi`` -- uniform random (control / tests);
+  * ``ba``        -- Barabási–Albert preferential attachment.
+
+All generators are deterministic in ``seed`` and return :class:`CSRGraph`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .storage import CSRGraph
+
+__all__ = ["chung_lu", "rmat", "erdos_renyi", "ba", "DATASET_SUITE", "make_dataset"]
+
+
+def erdos_renyi(n: int, m: int, seed: int = 0) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(int(m * 1.15) + 8, 2), dtype=np.int64)
+    return CSRGraph.from_edges(n, e[: m * 2])
+
+
+def chung_lu(n: int, m: int, gamma: float = 2.5, seed: int = 0) -> CSRGraph:
+    """Power-law expected-degree model: w_i ∝ (i + i0)^(-1/(gamma-1))."""
+    rng = np.random.default_rng(seed)
+    i0 = n ** (1.0 / (gamma - 1.0)) / 10.0 + 1.0
+    w = (np.arange(n) + i0) ** (-1.0 / (gamma - 1.0))
+    p = w / w.sum()
+    # draw 2*target endpoints; dedup shrinks the count back toward target
+    draws = int(m * 1.3) + 16
+    src = rng.choice(n, size=draws, p=p)
+    dst = rng.choice(n, size=draws, p=p)
+    # random relabel so node id does not correlate with degree
+    perm = rng.permutation(n)
+    e = np.stack([perm[src], perm[dst]], axis=1)
+    return CSRGraph.from_edges(n, e)
+
+
+def rmat(scale: int, edge_factor: int = 16, a: float = 0.57, b: float = 0.19,
+         c: float = 0.19, seed: int = 0) -> CSRGraph:
+    """R-MAT / Kronecker generator (web-graph-like skew), n = 2**scale."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        src_bit = r1 > (a + b)
+        ab = np.where(src_bit, c / (c + (1 - a - b - c)), a / (a + b))
+        dst_bit = r2 > ab
+        src |= src_bit.astype(np.int64) << bit
+        dst |= dst_bit.astype(np.int64) << bit
+    e = np.stack([src, dst], axis=1)
+    return CSRGraph.from_edges(n, e)
+
+
+def ba(n: int, attach: int = 4, seed: int = 0) -> CSRGraph:
+    """Barabási–Albert via the repeated-nodes trick (vectorized-ish)."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(attach))
+    repeated: list[int] = []
+    edges = []
+    for v in range(attach, n):
+        for t in targets:
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * attach)
+        idx = rng.integers(0, len(repeated), size=attach)
+        targets = [repeated[i] for i in idx]
+    return CSRGraph.from_edges(n, np.array(edges, dtype=np.int64))
+
+
+# --------------------------------------------------------------------------
+# A scaled-down stand-in for Table I: name -> (generator, kwargs).  Sizes are
+# chosen to run on one CPU core while spanning the paper's density regimes
+# (density = m/n from 2.1 [WIKI] to 43.5 [Clueweb]).
+DATASET_SUITE: dict[str, tuple] = {
+    "dblp-sim":    ("chung_lu", dict(n=30_000, m=100_000, gamma=2.3)),
+    "youtube-sim": ("chung_lu", dict(n=60_000, m=160_000, gamma=2.2)),
+    "wiki-sim":    ("chung_lu", dict(n=100_000, m=210_000, gamma=2.1)),
+    "cpt-sim":     ("erdos_renyi", dict(n=80_000, m=350_000)),
+    "lj-sim":      ("chung_lu", dict(n=100_000, m=870_000, gamma=2.5)),
+    "orkut-sim":   ("chung_lu", dict(n=60_000, m=2_300_000, gamma=2.8)),
+    "webbase-sim": ("rmat", dict(scale=16, edge_factor=9)),
+    "twitter-sim": ("rmat", dict(scale=15, edge_factor=36)),
+    "uk-sim":      ("rmat", dict(scale=16, edge_factor=35)),
+}
+
+_GENERATORS = {"chung_lu": chung_lu, "erdos_renyi": erdos_renyi, "rmat": rmat, "ba": ba}
+
+
+def make_dataset(name: str, seed: int = 0) -> CSRGraph:
+    gen, kwargs = DATASET_SUITE[name]
+    return _GENERATORS[gen](seed=seed, **kwargs)

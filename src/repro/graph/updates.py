@@ -1,0 +1,137 @@
+"""Edge-update memory buffer (paper §V.A, *Graph Maintenance*).
+
+The graph on disk is stored as adjacency lists; rewriting them per update would
+be prohibitive.  Following the paper, a bounded in-memory buffer holds the
+latest inserted/deleted edges, indexed by endpoint; ``nbr(v)`` reads merge the
+on-disk list with the buffered deltas.  When the buffer fills, the CSR is
+rewritten ("flushed") and the buffer cleared.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from .storage import CSRGraph
+
+__all__ = ["BufferedGraph"]
+
+
+class BufferedGraph:
+    """A CSRGraph plus an edge-update buffer with merged neighbor reads."""
+
+    def __init__(self, graph: CSRGraph, buffer_capacity: int = 1 << 16):
+        self.base = graph
+        self.capacity = int(buffer_capacity)
+        self._ins: dict[int, set[int]] = defaultdict(set)
+        self._del: dict[int, set[int]] = defaultdict(set)
+        self._size = 0
+        self._deg_delta = np.zeros(graph.n, dtype=np.int64)
+        self.flushes = 0
+
+    # ------------------------------------------------------------------ state
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def m(self) -> int:
+        return self.base.m + self._size
+
+    def degree(self, v: int) -> int:
+        return self.base.degree(v) + int(self._deg_delta[v])
+
+    def degrees(self) -> np.ndarray:
+        return self.base.degrees() + self._deg_delta
+
+    # ---------------------------------------------------------------- updates
+    def insert_edge(self, u: int, v: int) -> bool:
+        """Insert (u, v); returns False if the edge already exists."""
+        if u == v:
+            return False
+        if v in self._ins[u]:
+            return False
+        if v in self._del[u]:  # re-inserting a buffered deletion
+            self._del[u].discard(v)
+            self._del[v].discard(u)
+            self._size -= 1
+        else:
+            if self.base.has_edge(u, v):
+                return False
+            self._ins[u].add(v)
+            self._ins[v].add(u)
+            self._size += 1
+        self._deg_delta[u] += 1
+        self._deg_delta[v] += 1
+        self._maybe_flush()
+        return True
+
+    def delete_edge(self, u: int, v: int) -> bool:
+        """Delete (u, v); returns False if the edge does not exist."""
+        if v in self._del[u]:
+            return False
+        if v in self._ins[u]:
+            self._ins[u].discard(v)
+            self._ins[v].discard(u)
+            self._size -= 1
+        else:
+            if not self.base.has_edge(u, v):
+                return False
+            self._del[u].add(v)
+            self._del[v].add(u)
+            self._size += 1
+        self._deg_delta[u] -= 1
+        self._deg_delta[v] -= 1
+        self._maybe_flush()
+        return True
+
+    # ----------------------------------------------------------------- reads
+    def merged_neighbors(self, v: int, disk_nbrs: np.ndarray) -> np.ndarray:
+        """Apply buffered deltas for v to its on-disk adjacency list."""
+        dels = self._del.get(v)
+        ins = self._ins.get(v)
+        if not dels and not ins:
+            return disk_nbrs
+        out = disk_nbrs
+        if dels:
+            out = out[~np.isin(out, np.fromiter(dels, dtype=np.int32))]
+        if ins:
+            out = np.concatenate([out, np.fromiter(ins, dtype=np.int32)])
+        return out
+
+    # ----------------------------------------------------------------- flush
+    def _maybe_flush(self) -> None:
+        if self._size >= self.capacity:
+            self.flush()
+
+    def flush(self) -> None:
+        """Rewrite the CSR applying all buffered updates."""
+        if self._size == 0:
+            return
+        e = self.base.edge_list()
+        dels = set()
+        for u, vs in self._del.items():
+            for v in vs:
+                dels.add((min(u, v), max(u, v)))
+        if dels:
+            keep = np.array(
+                [(min(a, b), max(a, b)) not in dels for a, b in e], dtype=bool
+            )
+            e = e[keep]
+        adds = set()
+        for u, vs in self._ins.items():
+            for v in vs:
+                adds.add((min(u, v), max(u, v)))
+        if adds:
+            e = np.concatenate([e, np.array(sorted(adds), dtype=np.int64)])
+        self.base = CSRGraph.from_edges(self.n, e, dedup=False)
+        self._ins.clear()
+        self._del.clear()
+        self._size = 0
+        self._deg_delta[:] = 0
+        self.flushes += 1
+
+    def materialize(self) -> CSRGraph:
+        """Flush and return the up-to-date CSR."""
+        self.flush()
+        return self.base

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (interpret-validated on CPU; TPU is the target).
+
+segsum       -- blocked one-hot-matmul segment sum (edge scans: LocalCore
+                counts, GNN aggregation, bag pooling)
+embedding_bag-- scalar-prefetch gather-pool (recsys tables)
+flash_decode -- blocked long-KV decode attention (long_500k cells)
+"""
+from .ops import segment_sum, segment_sum_active, embedding_bag, flash_decode
+
+__all__ = ["segment_sum", "segment_sum_active", "embedding_bag", "flash_decode"]

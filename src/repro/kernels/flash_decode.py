@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: blocked single-token decode attention (flash-decode).
+
+The building block of the ``long_500k`` cells: one query token attends a long
+KV cache with running (max, sum, acc) softmax state carried in VMEM scratch
+across KV blocks — O(L·d) streaming, never materializing the (L,) score row
+in HBM.  GQA layout: the G query heads of one KV head share each KV block
+fetch.  The cache length is scalar-prefetched for tail masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr,
+    *, block_kv: int, scale: float,
+):
+    s = pl.program_id(1)
+    num_s = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]          # (G, d)
+    k = k_ref[0]            # (BS, d)
+    v = v_ref[0]            # (BS, d)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale               # (G, BS)
+    pos = s * block_kv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < len_ref[0], scores, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                          # (G, BS)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(s == num_s - 1)
+    def _finish():
+        out_ref[...] = (acc_scr[...] / l_scr[...]).astype(out_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jax.Array,        # (H, d)   H = Hkv * G query heads
+    k: jax.Array,        # (Hkv, S, d)
+    v: jax.Array,        # (Hkv, S, d)
+    cache_len: jax.Array,  # () int32 — valid prefix of S
+    *,
+    block_kv: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    H, d = q.shape
+    Hkv, S, _ = k.shape
+    assert H % Hkv == 0 and S % block_kv == 0
+    G = H // Hkv
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_flash_decode_kernel, block_kv=block_kv, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Hkv, S // block_kv),
+        in_specs=[
+            pl.BlockSpec((G, d), lambda h, s, ln: (h, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, s, ln: (h, s, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, s, ln: (h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((G, d), lambda h, s, ln: (h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((H, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(vals: jax.Array, rows: jax.Array, num_segments: int) -> jax.Array:
+    """Oracle for segsum: plain jax.ops.segment_sum (rows need not be sorted)."""
+    return jax.ops.segment_sum(vals, rows, num_segments=num_segments)
+
+
+def embedding_bag_ref(
+    table: jax.Array, indices: jax.Array, weights: jax.Array, mode: str = "sum"
+) -> jax.Array:
+    """Oracle for embedding_bag: gather + masked weighted sum/mean."""
+    mask = (indices >= 0).astype(table.dtype)
+    w = weights * mask
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)  # (B, L, D)
+    out = jnp.einsum("bld,bl->bd", rows, w)
+    if mode == "mean":
+        denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom
+    return out
+
+
+def flash_decode_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, cache_len: jax.Array
+) -> jax.Array:
+    """Oracle for flash_decode: full masked softmax attention, one query token."""
+    H, d = q.shape
+    Hkv, S, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(Hkv, G, d)
+    scores = jnp.einsum("hgd,hsd->hgs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    mask = jnp.arange(S)[None, None, :] < cache_len
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hgs,hsd->hgd", p, v.astype(jnp.float32))
+    return out.reshape(H, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """256-chip pod mesh (data, model), or 512-chip 2-pod (pod, data, model).
+
+    A function (not a module constant) so importing never touches device
+    state; the dry-run sets XLA_FLAGS for 512 host devices before any import.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D mesh (tests / reduced runs)."""
+    import numpy as np
+
+    dev = np.array(jax.devices())
+    return jax.sharding.Mesh(dev.reshape(-1, 1), ("data", "model"))

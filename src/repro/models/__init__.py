@@ -1,0 +1,3 @@
+from . import params, layers, transformer, moe, gnn, recsys
+
+__all__ = ["params", "layers", "transformer", "moe", "gnn", "recsys"]

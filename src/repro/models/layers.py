@@ -1,0 +1,115 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU, chunked flash-style attention."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _unroll_scans() -> bool:
+    """Dry-run metric mode: unroll internal scans so XLA's cost analysis sees
+    every iteration (HloCostAnalysis counts a `while` body once)."""
+    return os.environ.get("REPRO_UNROLL_SCANS") == "1"
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding; x (..., S, H, d), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def chunked_attention(q, k, v, *, chunk: int = 1024, causal: bool = True,
+                      q_offset=0, kv_len=None):
+    """Flash-style streaming attention in pure JAX (lax.scan over KV chunks).
+
+    q (B, S, H, d); k/v (B, T, Hkv, d) with GQA groups G = H // Hkv.
+    Never materializes the (S, T) score matrix — per-chunk (S, chunk) only —
+    so 32k prefill fits per-device memory (DESIGN.md §5).
+    """
+    B, S, H, d = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # MLA: value head dim may differ from q/k head dim
+    G = H // Hkv
+    scale = 1.0 / (d ** 0.5)
+    nchunks = -(-T // chunk)
+    Tp = nchunks * chunk
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qg = q.reshape(B, S, Hkv, G, d)
+    kc = k.reshape(B, nchunks, chunk, Hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = (jnp.arange(S) + q_offset)[:, None]
+    valid_len = T if kv_len is None else kv_len
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        base = ci * chunk
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = base + jnp.arange(chunk)[None, :]
+        mask = kpos < valid_len
+        if causal:
+            mask = mask & (kpos <= q_pos)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nchunks), kc, vc),
+        unroll=nchunks if _unroll_scans() else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """One-token attention over a (possibly sequence-sharded) KV cache.
+
+    q (B, 1, H, d); caches (B, T, Hkv, d).  Plain einsum + masked softmax:
+    under SPMD with the cache sequence axis sharded, XLA lowers the reduction
+    to per-shard partials + psum (the flash-combine of DESIGN.md §5); the
+    Pallas flash_decode kernel is the single-chip optimized variant.
+    """
+    B, _, H, d = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, d)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) / (d ** 0.5)
+    mask = jnp.arange(T)[None, None, None, :] < jnp.reshape(cache_len, (-1, 1, 1, 1))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, d).astype(q.dtype)

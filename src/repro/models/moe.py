@@ -1,0 +1,101 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the production "dropping" scheme: flatten (token, k) assignments,
+sort by expert, take the first C per expert (capacity factor), scatter into an
+(experts, C, E) buffer sharded expert->model / capacity->data — the scatter
+and the combine-gather are where SPMD inserts the all-to-all traffic that the
+roofline's collective term measures.  Expert FFNs are a single batched einsum
+over the expert axis (local to each model shard).
+
+Supports DeepSeek-style shared experts + first-k-dense layers and Arctic's
+parallel dense residual MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import Spec
+
+F32 = jnp.float32
+
+
+def moe_param_specs(cfg, L: int) -> dict:
+    m, E, dt = cfg.moe, cfg.d_model, cfg.dtype
+    X, F = m.num_experts, m.d_ff_expert
+    sp = {
+        "router": Spec((L, E, X), F32, (None, "embed", None)),
+        # experts ride the model axis; their embed dim is sharded over the
+        # batch axes (2D expert sharding — 480B/671B would not fit TP-only)
+        "w_gate": Spec((L, X, E, F), dt, (None, "expert", "expert_embed", None)),
+        "w_up": Spec((L, X, E, F), dt, (None, "expert", "expert_embed", None)),
+        "w_down": Spec((L, X, F, E), dt, (None, "expert", None, "expert_embed")),
+    }
+    if m.num_shared:
+        Fs = F * m.num_shared
+        sp["shared"] = {
+            "w_gate": Spec((L, E, Fs), dt, (None, "embed", "mlp")),
+            "w_up": Spec((L, E, Fs), dt, (None, "embed", "mlp")),
+            "w_down": Spec((L, Fs, E), dt, (None, "mlp", "embed")),
+        }
+    if m.dense_parallel:
+        sp["dense"] = {
+            "w_gate": Spec((L, E, cfg.d_ff), dt, (None, "embed", "mlp")),
+            "w_up": Spec((L, E, cfg.d_ff), dt, (None, "embed", "mlp")),
+            "w_down": Spec((L, cfg.d_ff, E), dt, (None, "mlp", "embed")),
+        }
+    return sp
+
+
+def _swiglu(x, g, u, d):
+    return (jax.nn.silu(x @ g) * (x @ u)) @ d
+
+
+def moe_apply(p, cfg, x, layer_idx=None, aux=None):
+    """x (B, S, E) -> (B, S, E).  Dropping top-k dispatch (see module doc)."""
+    m = cfg.moe
+    B, S, E = x.shape
+    T = B * S
+    X, k = m.num_experts, m.top_k
+    xt = x.reshape(T, E)
+
+    logits = xt.astype(F32) @ p["router"].astype(F32)          # (T, X)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    C = max(8, int(T * k / X * m.capacity_factor))
+    flat_e = top_e.reshape(-1).astype(jnp.int32)               # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(X, dtype=jnp.int32))
+    pos = jnp.arange(T * k, dtype=jnp.int32) - jnp.take(start, sorted_e)
+    keep = pos < C
+    slot_e = jnp.where(keep, sorted_e, X)                      # drop -> dummy
+    slot_p = jnp.where(keep, pos, 0)
+    tok = order // k
+
+    buf = jnp.zeros((X + 1, C, E), x.dtype).at[slot_e, slot_p].set(
+        jnp.take(xt, tok, axis=0))
+    h = buf[:X]                                                # (X, C, E)
+    h = jax.nn.silu(jnp.einsum("xce,xef->xcf", h, p["w_gate"])) * jnp.einsum(
+        "xce,xef->xcf", h, p["w_up"])
+    out_buf = jnp.einsum("xcf,xfe->xce", h, p["w_down"])       # (X, C, E)
+
+    gathered = out_buf[jnp.minimum(slot_e, X - 1), slot_p]     # (T*k, E)
+    gate = jnp.take(top_p.reshape(-1), order) * keep
+    y = jnp.zeros((T, E), x.dtype).at[tok].add(
+        (gathered.astype(F32) * gate[:, None]).astype(x.dtype))
+
+    if m.num_shared:
+        s = p["shared"]
+        y = y + _swiglu(xt, s["w_gate"], s["w_up"], s["w_down"])
+    if m.dense_parallel:
+        d = p["dense"]
+        y = y + _swiglu(xt, d["w_gate"], d["w_up"], d["w_down"])
+    if aux is not None:
+        # Switch-style load-balance loss terms
+        me = probs.mean(axis=0)
+        ce = jnp.zeros(X, F32).at[flat_e].add(1.0) / (T * k)
+        aux["load_balance"] = X * jnp.sum(me * ce)
+    return y.reshape(B, S, E)

@@ -1,0 +1,96 @@
+"""Parameter spec trees: one definition drives init, dry-run avals & sharding.
+
+A model's parameters are declared once as a nested dict of :class:`Spec`
+leaves carrying (shape, dtype, logical axes, init).  From that single tree we
+derive: real initialization (small configs), ShapeDtypeStructs (dry-run — no
+allocation), and NamedShardings (logical axes -> mesh axes via per-cell rules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()          # logical axis names (len == ndim; None = unsharded)
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def _is_spec(x):
+    return isinstance(x, Spec)
+
+
+def tree_avals(spec_tree):
+    """ShapeDtypeStruct tree (the dry-run parameter stand-ins)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def tree_init(spec_tree, key):
+    """Materialize parameters (reduced/smoke configs only)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        else:
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: dict):
+    """Logical-axis names -> mesh axes; unknown/None axes stay replicated."""
+
+    def one(s: Spec):
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        pspec = PartitionSpec(*[rules.get(a) if a is not None else None for a in axes])
+        return NamedSharding(mesh, pspec)
+
+    return jax.tree.map(one, spec_tree, is_leaf=_is_spec)
+
+
+def tree_num_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def tree_sharded_bytes(spec_tree, mesh, rules: dict) -> int:
+    """Per-chip parameter bytes under the given logical->mesh rules."""
+    def frac(s: Spec) -> float:
+        f = 1.0
+        axes = s.axes if s.axes else (None,) * len(s.shape)
+        for a in axes:
+            m = rules.get(a) if a is not None else None
+            if m is None:
+                continue
+            names = m if isinstance(m, tuple) else (m,)
+            for nm in names:
+                if nm in mesh.shape:
+                    f *= mesh.shape[nm]
+        return f
+
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize / frac(s)
+                   for s in leaves))
+
+
+def tree_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves))

@@ -1,0 +1,319 @@
+"""LM transformer: GQA (+qk_norm), MLA (DeepSeek), MoE, MTP; train & serve steps.
+
+Layers are stacked (leading dim = group depth) and run under ``jax.lax.scan``
+with per-layer remat — compile time is O(1) in depth; memory saves only layer
+inputs.  DeepSeek's first-k-dense prefix is a second stacked group.  MLA decode
+uses the *compressed latent cache* (kv_lora + rope dims per token — 576 B not
+64 KiB) with the weight-absorption trick, which is what makes the long_500k
+cell feasible.  Logical parameter axes: embed / heads / kv_heads / mlp / vocab
+/ expert (mapped to mesh axes per shape cell; see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from .params import Spec
+from .layers import (rms_norm, rope, chunked_attention, decode_attention,
+                     NEG_INF, _unroll_scans)
+from .moe import moe_param_specs, moe_apply
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------- param specs
+def _attn_specs(cfg: LMConfig, L: int) -> dict:
+    E, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = cfg.dtype
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "wq_a": Spec((L, E, m.q_lora), dt, (None, "embed", None)),
+            "q_norm": Spec((L, m.q_lora), F32, (None, None), init="ones"),
+            "wq_b": Spec((L, m.q_lora, H * (m.dh_nope + m.dh_rope)), dt,
+                         (None, None, "heads")),
+            "wkv_a": Spec((L, E, m.kv_lora + m.dh_rope), dt, (None, "embed", None)),
+            "kv_norm": Spec((L, m.kv_lora), F32, (None, None), init="ones"),
+            "wk_b": Spec((L, m.kv_lora, H * m.dh_nope), dt, (None, None, "heads")),
+            "wv_b": Spec((L, m.kv_lora, H * m.dh_v), dt, (None, None, "heads")),
+            "wo": Spec((L, H * m.dh_v, E), dt, (None, "heads", "embed")),
+        }
+    sp = {
+        "wq": Spec((L, E, H * dh), dt, (None, "embed", "heads")),
+        "wk": Spec((L, E, Hkv * dh), dt, (None, "embed", "kv_heads")),
+        "wv": Spec((L, E, Hkv * dh), dt, (None, "embed", "kv_heads")),
+        "wo": Spec((L, H * dh, E), dt, (None, "heads", "embed")),
+    }
+    if cfg.qk_norm:
+        sp["q_norm"] = Spec((L, dh), F32, (None, None), init="ones")
+        sp["k_norm"] = Spec((L, dh), F32, (None, None), init="ones")
+    return sp
+
+
+def _dense_mlp_specs(cfg: LMConfig, L: int) -> dict:
+    E, dt = cfg.d_model, cfg.dtype
+    return {
+        "w_gate": Spec((L, E, cfg.d_ff), dt, (None, "embed", "mlp")),
+        "w_up": Spec((L, E, cfg.d_ff), dt, (None, "embed", "mlp")),
+        "w_down": Spec((L, cfg.d_ff, E), dt, (None, "mlp", "embed")),
+    }
+
+
+def _layer_group_specs(cfg: LMConfig, L: int, use_moe: bool) -> dict:
+    E = cfg.d_model
+    g = {
+        "attn": _attn_specs(cfg, L),
+        "ln_attn": Spec((L, E), F32, (None, "embed"), init="ones"),
+        "ln_mlp": Spec((L, E), F32, (None, "embed"), init="ones"),
+    }
+    if use_moe:
+        g["moe"] = moe_param_specs(cfg, L)
+    else:
+        g["mlp"] = _dense_mlp_specs(cfg, L)
+    return g
+
+
+def layer_groups(cfg: LMConfig) -> list[tuple[str, int, bool]]:
+    """[(group name, depth, uses_moe)]; DeepSeek has a dense prefix group."""
+    kd = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    groups = []
+    if kd:
+        groups.append(("layers0", kd, False))
+    groups.append(("layers", cfg.n_layers - kd, cfg.moe is not None))
+    return groups
+
+
+def lm_param_specs(cfg: LMConfig) -> dict:
+    E, dt = cfg.d_model, cfg.dtype
+    specs = {
+        "embed": Spec((cfg.vocab, E), dt, ("vocab", "embed"), scale=1.0),
+        "ln_f": Spec((E,), F32, ("embed",), init="ones"),
+        "lm_head": Spec((E, cfg.vocab), dt, ("embed", "vocab")),
+    }
+    for name, depth, use_moe in layer_groups(cfg):
+        specs[name] = _layer_group_specs(cfg, depth, use_moe)
+    if cfg.mtp_depth > 0:
+        D = cfg.mtp_depth
+        specs["mtp"] = {
+            "proj": Spec((D, 2 * E, E), dt, (None, "embed", None)),
+            "ln_in": Spec((D, E), F32, (None, "embed"), init="ones"),
+            "ln_prev": Spec((D, E), F32, (None, "embed"), init="ones"),
+            "mlp": _dense_mlp_specs(cfg, D),
+        }
+    return specs
+
+
+# ------------------------------------------------------------------- attention
+def _gqa_qkv(p, cfg: LMConfig, x, positions):
+    B, S, E = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, dh)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_qkv_full(p, cfg: LMConfig, x, positions):
+    """MLA decompressed form (train/prefill: full per-head k, v)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.dh_nope + m.dh_rope)
+    q_nope, q_rope = q[..., : m.dh_nope], q[..., m.dh_nope:]
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : m.kv_lora], p["kv_norm"])
+    k_rope = kv_a[..., m.kv_lora:][:, :, None, :]
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, m.dh_nope)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, H, m.dh_v)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.dh_rope))], axis=-1)
+    return q, k, v
+
+
+def _mla_decode(p, cfg: LMConfig, x, positions, cache):
+    """Latent-cache decode with weight absorption: cache is (ckv, kr) only."""
+    m = cfg.mla
+    B, S, _ = x.shape            # S == new tokens (1 for decode)
+    H = cfg.n_heads
+    ckv_c, kr_c, length = cache
+    T = ckv_c.shape[1]
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.dh_nope + m.dh_rope)
+    q_nope, q_rope = q[..., : m.dh_nope], q[..., m.dh_nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : m.kv_lora], p["kv_norm"])       # (B,S,kvl)
+    k_rope = rope(kv_a[:, :, None, m.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(
+        ckv_c, c_kv.astype(ckv_c.dtype), length, axis=1)
+    kr_c = jax.lax.dynamic_update_slice_in_dim(
+        kr_c, k_rope.astype(kr_c.dtype), length, axis=1)
+    # absorb wk_b into q: q_abs (B,S,H,kvl)
+    wk = p["wk_b"].reshape(m.kv_lora, H, m.dh_nope)
+    q_abs = jnp.einsum("bshn,khn->bshk", q_nope, wk)
+    scale = 1.0 / ((m.dh_nope + m.dh_rope) ** 0.5)
+    s = (jnp.einsum("bshk,btk->bhst", q_abs.astype(F32), ckv_c.astype(F32))
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(F32), kr_c.astype(F32))) * scale
+    mask = jnp.arange(T)[None, None, None, :] < jnp.reshape(length + S, (-1, 1, 1, 1))
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhst,btk->bshk", pr, ckv_c.astype(F32))   # latent context
+    wv = p["wv_b"].reshape(m.kv_lora, H, m.dh_v)
+    out = jnp.einsum("bshk,khv->bshv", ctx, wv.astype(F32))
+    out = out.reshape(B, S, H * m.dh_v).astype(x.dtype)
+    return out @ p["wo"], (ckv_c, kr_c)
+
+
+def attention_block(p, cfg: LMConfig, x, positions, cache=None):
+    """Returns (out, new cache arrays or None)."""
+    B, S, _ = x.shape
+    if cache is not None and cfg.mla is not None:
+        return _mla_decode(p, cfg, x, positions, cache)
+    qkv = _mla_qkv_full if cfg.mla is not None else _gqa_qkv
+    q, k, v = qkv(p, cfg, x, positions)
+    if cache is None:
+        return chunked_attention(q, k, v, causal=True).reshape(B, S, -1) @ p["wo"], None
+    k_cache, v_cache, length = cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), length, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), length, axis=1)
+    out = decode_attention(q, k_cache, v_cache, length + S)
+    return out.reshape(B, S, -1) @ p["wo"], (k_cache, v_cache)
+
+
+# ------------------------------------------------------------------- layers
+def _dense_mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def _layer(cfg: LMConfig, x, lp, positions, use_moe, cache=None):
+    a, new_kv = attention_block(lp["attn"], cfg, rms_norm(x, lp["ln_attn"]),
+                                positions, cache)
+    x = x + a
+    h = rms_norm(x, lp["ln_mlp"])
+    f = moe_apply(lp["moe"], cfg, h) if use_moe else _dense_mlp(lp["mlp"], h)
+    return x + f, new_kv
+
+
+def lm_forward(params, cfg: LMConfig, tokens, positions=None, caches=None):
+    """tokens (B, S) -> (hidden (B, S, E), new caches or None)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    groups = layer_groups(cfg)
+    new_cache_parts = {}
+    offset = 0
+    for name, depth, use_moe in groups:
+        gp = params[name]
+        if caches is None:
+            def body(carry, lp, _moe=use_moe):
+                y, _ = _layer(cfg, carry, lp, positions, _moe)
+                return y, None
+
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, gp,
+                                unroll=depth if _unroll_scans() else 1)
+        else:
+            length = caches["len"]
+            cache_keys = [k for k in caches if k != "len"]
+            slices = tuple(caches[k][offset:offset + depth] for k in cache_keys)
+
+            def body(carry, inp, _moe=use_moe):
+                lp = inp[0]
+                y, new_kv = _layer(cfg, carry, lp, positions, _moe,
+                                   cache=(*inp[1:], length))
+                return y, new_kv
+
+            x, kvs = jax.lax.scan(body, x, (gp, *slices))
+            for k, arr in zip(cache_keys, kvs):
+                new_cache_parts.setdefault(k, []).append(arr)
+        offset += depth
+
+    if caches is None:
+        new_caches = None
+    else:
+        new_caches = {
+            k: jnp.concatenate(v, axis=0) if len(v) > 1 else v[0]
+            for k, v in new_cache_parts.items()
+        }
+        new_caches["len"] = caches["len"] + S
+    return rms_norm(x, params["ln_f"]), new_caches
+
+
+def lm_logits(params, cfg: LMConfig, hidden):
+    return hidden @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------- steps
+def softmax_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -ll.mean()
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels):
+    hidden, _ = lm_forward(params, cfg, tokens)
+    loss = softmax_xent(lm_logits(params, cfg, hidden), labels)
+    if cfg.mtp_depth > 0:
+        loss = loss + 0.3 * _mtp_loss(params, cfg, hidden, tokens, labels)
+    return loss
+
+
+def _mtp_loss(params, cfg: LMConfig, hidden, tokens, labels):
+    """DeepSeek-V3 multi-token prediction: chained extra-depth predictions."""
+    mtp = params["mtp"]
+    h = hidden
+    total = 0.0
+    for d in range(cfg.mtp_depth):
+        nxt = jnp.roll(tokens, -(d + 1), axis=1)
+        e = jnp.take(params["embed"], nxt, axis=0).astype(cfg.dtype)
+        h = jnp.concatenate(
+            [rms_norm(h, mtp["ln_prev"][d]), rms_norm(e, mtp["ln_in"][d])], axis=-1
+        ) @ mtp["proj"][d]
+        h = h + _dense_mlp(jax.tree.map(lambda a: a[d], mtp["mlp"]), h)
+        total = total + softmax_xent(
+            lm_logits(params, cfg, h), jnp.roll(labels, -(d + 1), axis=1))
+    return total / cfg.mtp_depth
+
+
+def make_kv_cache_specs(cfg: LMConfig, batch: int, max_len: int):
+    """Decode-cache avals; MLA uses the compressed latent cache."""
+    L = cfg.n_layers
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jax.ShapeDtypeStruct((L, batch, max_len, m.kv_lora), cfg.dtype),
+            "kr": jax.ShapeDtypeStruct((L, batch, max_len, m.dh_rope), cfg.dtype),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, cfg.n_kv, cfg.head_dim), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, cfg.n_kv, cfg.head_dim), cfg.dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def serve_prefill(params, cfg: LMConfig, tokens):
+    hidden, _ = lm_forward(params, cfg, tokens)
+    return lm_logits(params, cfg, hidden[:, -1:, :])
+
+
+def serve_decode(params, cfg: LMConfig, tokens, caches):
+    """One decode step: tokens (B, 1) + caches -> (logits, new caches)."""
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(caches["len"][None, None], (B, 1))
+    hidden, new_caches = lm_forward(params, cfg, tokens, positions, caches)
+    return lm_logits(params, cfg, hidden), new_caches

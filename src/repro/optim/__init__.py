@@ -1,0 +1,5 @@
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,
+                        adamw_state_avals, q8_encode, q8_decode, compress_psum)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "adamw_state_avals",
+           "q8_encode", "q8_decode", "compress_psum"]

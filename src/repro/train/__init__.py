@@ -1,0 +1,5 @@
+from .checkpoint import save, restore, latest_step, CheckpointManager
+from .trainer import TrainLoop, make_source
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager",
+           "TrainLoop", "make_source"]

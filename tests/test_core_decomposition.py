@@ -1,0 +1,147 @@
+"""Core decomposition: faithfulness to the paper + correctness vs IMCore."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import CSRGraph, paper_example_graph, chung_lu, rmat, erdos_renyi
+from repro.core.imcore import imcore_bz, imcore_peel
+from repro.core.semicore import HostEngine, decompose
+
+EXPECTED_CORES = np.array([3, 3, 3, 3, 2, 2, 2, 2, 1])
+
+
+def test_paper_example_graph_shape():
+    g = paper_example_graph()
+    assert g.n == 9 and g.m == 15
+    np.testing.assert_array_equal(g.degrees(), [3, 3, 4, 6, 3, 5, 3, 2, 1])
+
+
+def test_imcore_on_paper_example():
+    g = paper_example_graph()
+    np.testing.assert_array_equal(imcore_bz(g), EXPECTED_CORES)
+    np.testing.assert_array_equal(imcore_peel(g), EXPECTED_CORES)
+
+
+# ---------------------------------------------------------------- Fig. 2/4/5
+def test_semicore_seq_matches_fig2():
+    """Algorithm 3 on Fig. 1: 4 iterations x 9 nodes = 36 computations."""
+    r = HostEngine(paper_example_graph()).semicore("seq")
+    np.testing.assert_array_equal(r.core, EXPECTED_CORES)
+    assert r.iterations == 4
+    assert r.node_computations == 36
+
+
+def test_semicore_plus_seq_matches_fig4():
+    """Algorithm 4 on Fig. 1: 23 node computations (Example 4.2)."""
+    r = HostEngine(paper_example_graph()).semicore_plus("seq")
+    np.testing.assert_array_equal(r.core, EXPECTED_CORES)
+    assert r.node_computations == 23
+
+
+def test_semicore_star_seq_matches_fig5():
+    """Algorithm 5 on Fig. 1: 3 iterations, 11 node computations (Example 4.3)."""
+    r = HostEngine(paper_example_graph()).semicore_star("seq")
+    np.testing.assert_array_equal(r.core, EXPECTED_CORES)
+    assert r.iterations == 3
+    assert r.node_computations == 11
+    # Example 4.3: after convergence cnt(v5)=4? -- check invariant instead:
+    # cnt(v) must equal |{u in nbr(v): core(u) >= core(v)}| >= core(v)
+    g = paper_example_graph()
+    for v in range(g.n):
+        exact = int((r.core[g.neighbors(v)] >= r.core[v]).sum())
+        assert r.cnt[v] == exact
+        assert r.cnt[v] >= r.core[v]
+
+
+def test_semicore_star_fewer_computations_than_plus_than_basic():
+    g = chung_lu(2000, 8000, seed=3)
+    basic = HostEngine(g).semicore("seq")
+    plus = HostEngine(g).semicore_plus("seq")
+    star = HostEngine(g).semicore_star("seq")
+    assert star.node_computations <= plus.node_computations <= basic.node_computations
+    assert star.edge_block_reads <= basic.edge_block_reads
+
+
+# ------------------------------------------------------------- correctness
+@pytest.mark.parametrize("algorithm", ["semicore", "semicore+", "semicore*"])
+@pytest.mark.parametrize("schedule", ["seq", "batch"])
+def test_algorithms_match_oracle_random(algorithm, schedule):
+    for seed in range(3):
+        g = erdos_renyi(300, 900, seed=seed)
+        expect = imcore_peel(g)
+        r = decompose(g, algorithm, schedule, block_edges=64)
+        np.testing.assert_array_equal(r.core, expect, err_msg=f"{algorithm}/{schedule}")
+
+
+@pytest.mark.parametrize("gen", [chung_lu, erdos_renyi])
+def test_batch_star_on_skewed(gen):
+    g = gen(1500, 6000, seed=11)
+    expect = imcore_bz(g)
+    np.testing.assert_array_equal(imcore_peel(g), expect)
+    r = decompose(g, "semicore*", "batch", block_edges=128)
+    np.testing.assert_array_equal(r.core, expect)
+
+
+def test_rmat_all_algorithms_agree():
+    g = rmat(9, 8, seed=5)
+    expect = imcore_peel(g)
+    for algo in ["semicore", "semicore+", "semicore*"]:
+        r = decompose(g, algo, "batch")
+        np.testing.assert_array_equal(r.core, expect, err_msg=algo)
+
+
+# ---------------------------------------------------------------- property
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(2, 60))
+    max_e = min(n * (n - 1) // 2, 150)
+    num_e = draw(st.integers(0, max_e))
+    edges = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=num_e,
+            max_size=num_e,
+        )
+    )
+    return n, edges
+
+
+@given(random_graph())
+@settings(max_examples=120, deadline=None)
+def test_property_semicore_star_equals_imcore(ng):
+    n, edges = ng
+    g = CSRGraph.from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
+    expect = imcore_bz(g)
+    for schedule in ("seq", "batch"):
+        r = decompose(g, "semicore*", schedule, block_edges=16)
+        np.testing.assert_array_equal(r.core, expect)
+        # the k-core property: induced subgraph of {core >= k} has min degree >= k
+    for k in range(1, int(expect.max()) + 1):
+        nodes = np.flatnonzero(expect >= k)
+        sub = g.induced_subgraph(nodes)
+        if sub.n:
+            assert (sub.degrees() >= k).all() or sub.m == 0 and k > 0 and (expect[nodes] >= k).all()
+
+
+@given(random_graph())
+@settings(max_examples=60, deadline=None)
+def test_property_kcore_minimum_degree(ng):
+    """G_k = induced({v: core(v) >= k}) has min degree >= k (Lemma 2.1)."""
+    n, edges = ng
+    g = CSRGraph.from_edges(n, np.array(edges, dtype=np.int64).reshape(-1, 2))
+    core = imcore_bz(g)
+    for k in range(1, int(core.max()) + 1):
+        nodes = np.flatnonzero(core >= k)
+        sub = g.induced_subgraph(nodes)
+        assert sub.n == len(nodes)
+        if len(nodes):
+            assert sub.degrees().min() >= k
+
+
+def test_io_accounting_read_only_sequential():
+    """SemiCore scans every block once per pass: reads == l * ceil(2m/B)."""
+    g = erdos_renyi(400, 1600, seed=1)
+    eng = HostEngine(g, block_edges=64)
+    r = eng.semicore("seq")
+    blocks = -(-g.num_directed // 64)
+    assert r.edge_block_reads == r.iterations * blocks
