@@ -1,0 +1,151 @@
+"""Streaming core service benchmark: sustained updates/s + query QPS.
+
+A mixed workload on a Chung–Lu graph: micro-batches of edge inserts/deletes
+ingested through ``CoreService`` interleaved with bursts of read queries
+(coreness lookups, k-core membership, top-k) against the committed epoch
+view.  Reports updates/s, query QPS, edge-block reads per batch, cache hit
+rate, and the cost of a WAL+snapshot recovery vs. a cold decomposition.
+Always verifies the streamed ``core`` against ``decompose`` on the final
+graph.
+
+  PYTHONPATH=src python benchmarks/bench_stream.py --quick
+  REPRO_BENCH_FULL=1 PYTHONPATH=src python benchmarks/bench_stream.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+from repro.core import decompose  # noqa: E402
+from repro.graph import chung_lu  # noqa: E402
+from repro.stream import CoreService, mixed_stream  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def query_burst(svc: CoreService, rng, num_queries: int) -> int:
+    """A read burst against the current epoch; returns #queries served."""
+    served = 0
+    kmax = svc.degeneracy()
+    for _ in range(num_queries // 4):
+        svc.coreness(int(rng.integers(svc.bg.n)))
+        svc.in_kcore(int(rng.integers(svc.bg.n)), max(kmax - 1, 1))
+        svc.top_k(100)
+        svc.kcore_members(max(kmax - 1, 1))
+        served += 4
+    return served
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    args = ap.parse_args()
+    full = os.environ.get("REPRO_BENCH_FULL") == "1" and not args.quick
+
+    if full:  # the ISSUE acceptance workload
+        n, m, num_updates, batch = 30_000, 200_000, 10_000, 200
+    elif args.quick:
+        n, m, num_updates, batch = 3_000, 12_000, 600, 100
+    else:
+        n, m, num_updates, batch = 10_000, 60_000, 3_000, 150
+    queries_per_batch = 200
+
+    g = chung_lu(n, m, seed=1)
+    ops, _ = mixed_stream(g, num_updates, seed=2)
+    rng = np.random.default_rng(3)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        svc = CoreService(
+            g,
+            wal_path=os.path.join(tmp, "wal.jsonl"),
+            snapshot_dir=os.path.join(tmp, "snaps"),
+        )
+        num_batches = -(-len(ops) // batch)
+        snapshot_at = max((2 * num_batches) // 3, 1)  # leaves a WAL tail
+        update_s = query_s = 0.0
+        queries = 0
+        for b, i in enumerate(range(0, len(ops), batch)):
+            t0 = time.perf_counter()
+            svc.ingest(ops[i : i + batch])
+            update_s += time.perf_counter() - t0
+            if b + 1 == snapshot_at:
+                svc.snapshot()
+            t0 = time.perf_counter()
+            queries += query_burst(svc, rng, queries_per_batch)
+            query_s += time.perf_counter() - t0
+
+        # correctness gate: the stream must equal a fresh decomposition
+        final = svc.bg.materialize()
+        ref = decompose(final, "semicore*", "batch")
+        assert np.array_equal(svc.maintainer.core, ref.core), "stream != decompose"
+
+        log = svc.batch_log
+        stats = svc.service_stats()
+        applied = stats["updates_applied"]
+        cache_total = stats["cache_hits"] + stats["cache_misses"]
+        rows = {
+            "n": n, "m": m, "num_updates": num_updates, "batch": batch,
+            "epochs": svc.epoch,
+            "updates_per_s": applied / update_s,
+            "query_qps": queries / query_s,
+            "edge_block_reads_per_batch": float(
+                np.mean([s.edge_block_reads for s in log])
+            ),
+            "node_table_reads_per_batch": float(
+                np.mean([s.node_table_reads for s in log])
+            ),
+            "node_computations_per_update": float(
+                sum(s.node_computations for s in log) / max(applied, 1)
+            ),
+            "p50_batch_ms": float(
+                np.percentile([s.wall_time_s for s in log], 50) * 1e3
+            ),
+            "p99_batch_ms": float(
+                np.percentile([s.wall_time_s for s in log], 99) * 1e3
+            ),
+            "cache_hit_rate": stats["cache_hits"] / max(cache_total, 1),
+            "degeneracy": stats["degeneracy"],
+        }
+
+        # recovery cost vs a cold decomposition of the final graph
+        svc.close()
+        t0 = time.perf_counter()
+        _, rec = CoreService.recover(
+            wal_path=os.path.join(tmp, "wal.jsonl"),
+            snapshot_dir=os.path.join(tmp, "snaps"),
+        )
+        rows["recovery_s"] = time.perf_counter() - t0
+        rows["recovery_replayed_updates"] = rec.replayed_updates
+        rows["recovery_settle_computations"] = rec.settle_node_computations
+        rows["cold_decompose_computations"] = ref.node_computations
+
+    print("name,us_per_call,derived")
+    print(f"stream/ingest,{update_s / max(applied, 1) * 1e6:.1f},"
+          f"updates_per_s={rows['updates_per_s']:.0f};"
+          f"io_blocks_per_batch={rows['edge_block_reads_per_batch']:.1f};"
+          f"p99_batch_ms={rows['p99_batch_ms']:.1f}")
+    print(f"stream/query,{query_s / max(queries, 1) * 1e6:.1f},"
+          f"qps={rows['query_qps']:.0f};"
+          f"cache_hit_rate={rows['cache_hit_rate']:.3f}")
+    print(f"stream/recovery,{rows['recovery_s'] * 1e6:.1f},"
+          f"settle_comp={rows['recovery_settle_computations']};"
+          f"cold_comp={rows['cold_decompose_computations']}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "stream.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# verified: streamed core == decompose(final) on n={n}, "
+          f"m={final.m}, {num_updates} updates", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,12 +23,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
 
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.compat.jaxshims import shard_map  # noqa: E402
+from repro.launch.mesh import make_production_mesh, use_mesh  # noqa: E402
 from repro.launch.dryrun import _metrics, ICI_BW, HBM_BW  # noqa: E402
 
 N = 2_449_029            # ogb_products nodes
@@ -59,7 +59,7 @@ def run():
                       NamedSharding(mesh, P(axes))),
         out_shardings=NamedSharding(mesh, P()),
     )
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         mb = _metrics(fb.lower(h, src, dst).compile())
 
     # ------------- optimized: dst-striped edges -> local partial + all-gather
@@ -78,7 +78,7 @@ def run():
                      NamedSharding(mesh, P(axes)), NamedSharding(mesh, P(axes))),
        out_shardings=NamedSharding(mesh, P()))
     stripe_lo = sds((CHIPS,), jnp.int32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ms = _metrics(fs.lower(h, src, dst, stripe_lo).compile())
 
     rows = {}

@@ -1,0 +1,54 @@
+"""Streaming core-graph service end to end (§V as a long-lived process).
+
+A CoreService ingests a live insert/delete stream in micro-batches while
+serving coreness / k-core / top-k queries from epoch-versioned snapshots,
+then "crashes" and recovers from its write-ahead log + node-state snapshot
+without recomputing the decomposition from scratch.
+
+    PYTHONPATH=src python examples/stream_service.py
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import decompose
+from repro.graph import chung_lu
+from repro.stream import CoreService, mixed_stream
+
+n, m, num_updates, batch = 10_000, 60_000, 1_000, 100
+g = chung_lu(n, m, seed=1)
+stream, _ = mixed_stream(g, num_updates, seed=0)
+
+tmp = tempfile.mkdtemp(prefix="core_stream_")
+svc = CoreService(g, wal_path=os.path.join(tmp, "wal.jsonl"),
+                  snapshot_dir=os.path.join(tmp, "snaps"),
+                  snapshot_every=4)
+print(f"service up: n={n}, m={m}, degeneracy={svc.degeneracy()}, epoch 0")
+
+t0 = time.time()
+for i in range(0, num_updates, batch):
+    s = svc.ingest(stream[i : i + batch])
+    top = svc.top_k(3)
+    print(f"epoch {s.epoch:>2}: +{s.num_applied_inserts}/-{s.num_applied_deletes} "
+          f"edges, {s.num_changed} cores changed, {s.edge_block_reads} block "
+          f"I/Os, top-3 {top.tolist()} (core {svc.coreness(top).tolist()})")
+rate = svc.service_stats()["updates_applied"] / (time.time() - t0)
+print(f"sustained {rate:.0f} updates/s; cache hit rate "
+      f"{svc.cache.hits / max(svc.cache.hits + svc.cache.misses, 1):.2f}")
+
+svc.close()  # --- crash here: everything below rebuilds from disk ----------
+t0 = time.time()
+svc2, rec = CoreService.recover(wal_path=os.path.join(tmp, "wal.jsonl"),
+                                snapshot_dir=os.path.join(tmp, "snaps"))
+print(f"recovered epoch {rec.recovered_epoch} from snapshot@"
+      f"{rec.snapshot_epoch} + {rec.replayed_batches} WAL batches in "
+      f"{time.time() - t0:.2f}s (settle: {rec.settle_node_computations} "
+      f"node computations)")
+
+ref = decompose(svc2.bg.materialize(), "semicore*", "batch")
+assert np.array_equal(svc2.maintainer.core, ref.core)
+assert np.array_equal(svc2.maintainer.core, svc.maintainer.core)
+print(f"recovered state exact (== full decompose, {ref.node_computations} "
+      f"computations avoided per restart)")

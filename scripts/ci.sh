@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 CI: dev deps (best effort — hermetic images fall back to the
+# repro.compat hypothesis stub), full test suite, streaming bench smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt \
+  || echo "WARN: dev-dep install failed; relying on repro.compat fallbacks" >&2
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick

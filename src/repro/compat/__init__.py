@@ -1,0 +1,4 @@
+"""Compatibility shims: optional-dependency fallbacks and version bridges."""
+from .hypothesis_fallback import install_hypothesis_fallback
+
+__all__ = ["install_hypothesis_fallback"]

@@ -1,0 +1,177 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The test suite declares ``hypothesis`` as a dev dependency (pyproject.toml),
+but hermetic images may lack it and cannot reach an index.  This module
+provides a minimal, API-compatible subset — ``given``, ``settings`` and the
+``strategies`` the suite actually uses — backed by a seeded PRNG so every run
+draws the same examples.  It is a *gate*, not a replacement: no shrinking, no
+example database, no health checks.  ``install_hypothesis_fallback()`` is a
+no-op when the real package is importable.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+__all__ = ["install_hypothesis_fallback"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a sampler: ``example(rnd) -> value``."""
+
+    def __init__(self, sample, is_data: bool = False):
+        self._sample = sample
+        self.is_data = is_data
+
+    def example(self, rnd: random.Random):
+        return self._sample(rnd)
+
+
+class _DataObject:
+    """The value drawn for ``st.data()``: interactive draws inside the test."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.example(self._rnd)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def _lists(elements: _Strategy, *, min_size: int = 0, max_size: int | None = None) -> _Strategy:
+    def sample(r: random.Random):
+        hi = min_size + 10 if max_size is None else max_size
+        k = r.randint(min_size, max(hi, min_size))
+        return [elements.example(r) for _ in range(k)]
+
+    return _Strategy(sample)
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.example(r) for s in strategies))
+
+
+def _randoms(use_true_random: bool = False) -> _Strategy:
+    return _Strategy(lambda r: random.Random(r.randrange(2**32)))
+
+
+def _data() -> _Strategy:
+    return _Strategy(None, is_data=True)
+
+
+def _composite(fn):
+    """``@st.composite``: fn(draw, *args) becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def sample(r: random.Random):
+            return fn(lambda s: s.example(r), *args, **kwargs)
+
+        return _Strategy(sample)
+
+    return builder
+
+
+def _settings(**kwargs):
+    """Records settings on the function; only ``max_examples`` is honored."""
+
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+def _given(*strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(fn, "_fallback_settings", {})
+            n = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rnd = random.Random((base << 20) + i)
+                drawn = [
+                    _DataObject(rnd) if s.is_data else s.example(rnd)
+                    for s in strategies
+                ]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except BaseException:
+                    print(
+                        f"[hypothesis-fallback] {fn.__qualname__} failed on "
+                        f"example {i}: {drawn!r}"[:2000],
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # Strategies fill the trailing parameters; expose only the leading
+        # ones (pytest fixtures) so collection does not look for "fixtures"
+        # named after drawn arguments.
+        params = list(inspect.signature(fn).parameters.values())
+        remaining = params[: max(len(params) - len(strategies), 0)]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__  # keep pytest off the original signature
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+def install_hypothesis_fallback() -> bool:
+    """Register the fallback as ``hypothesis`` if the real one is missing.
+
+    Returns True when the fallback was installed, False when the real
+    package (or a previously installed fallback) is already importable.
+    """
+    if "hypothesis" in sys.modules:
+        return False
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+
+        return False
+    except ImportError:
+        pass
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.booleans = _booleans
+    st.sampled_from = _sampled_from
+    st.lists = _lists
+    st.tuples = _tuples
+    st.randoms = _randoms
+    st.data = _data
+    st.composite = _composite
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = _given
+    mod.settings = _settings
+    mod.strategies = st
+    mod.__is_fallback__ = True
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return True

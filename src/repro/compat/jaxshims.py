@@ -1,0 +1,26 @@
+"""jax version bridges for the pinned 0.4.x line vs newer public APIs."""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+
+    _HAS_PUBLIC = True
+except ImportError:  # jax < 0.6: experimental location, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _HAS_PUBLIC = False
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kwargs):
+    """``jax.shard_map`` with the modern signature on either jax line.
+
+    Newer jax renamed ``check_rep`` to ``check_vma``; this forwards the flag
+    under whichever name the installed jax understands.
+    """
+    if _HAS_PUBLIC:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma, **kwargs)

@@ -31,7 +31,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from ..compat.jaxshims import shard_map
 
 from ..graph.storage import CSRGraph
 

@@ -26,7 +26,7 @@ from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from .semicore import HostEngine
 
-__all__ = ["MaintStats", "CoreMaintainer"]
+__all__ = ["MaintStats", "BatchMaintStats", "CoreMaintainer"]
 
 _PHI, _Q, _CIRC, _CROSS = 0, 1, 2, 3
 
@@ -39,6 +39,21 @@ class MaintStats:
     node_table_reads: int
     iterations: int
     num_changed: int
+
+
+@dataclass
+class BatchMaintStats:
+    """Aggregate stats for one micro-batch of edge updates (stream path)."""
+
+    algorithm: str
+    num_deletes: int
+    num_inserts: int
+    num_noops: int  # updates already reflected in the graph (skipped)
+    node_computations: int
+    edge_block_reads: int
+    node_table_reads: int
+    iterations: int
+    num_changed: int  # nodes whose core differs from the batch-start core
 
 
 class CoreMaintainer:
@@ -67,6 +82,56 @@ class CoreMaintainer:
         return (
             self.engine.reader.reads - snap[0],
             self.engine.reader.node_table_reads - snap[1],
+        )
+
+    # =====================================================================
+    # Micro-batch application (streaming §V: deletes first, then inserts)
+    # =====================================================================
+    def apply_batch(
+        self,
+        deletes,
+        inserts,
+        insert_algorithm: str = "semiinsert*",
+    ) -> BatchMaintStats:
+        """Apply a coalesced micro-batch of updates, deletes before inserts.
+
+        Updates that are already reflected in the graph (deleting a missing
+        edge, inserting a present one) are counted as no-ops rather than
+        raised — the stream admission path resolves each edge's *final*
+        state, so a no-op just means the stream and the graph already agree.
+        """
+        snap = self._io_snapshot()
+        core0 = self.core.copy()
+        comp = iters = nd = ni = noop = 0
+        for u, v in deletes:
+            try:
+                s = self.delete_edge(int(u), int(v))
+            except KeyError:
+                noop += 1
+                continue
+            comp += s.node_computations
+            iters += s.iterations
+            nd += 1
+        for u, v in inserts:
+            try:
+                s = self.insert_edge(int(u), int(v), algorithm=insert_algorithm)
+            except KeyError:
+                noop += 1
+                continue
+            comp += s.node_computations
+            iters += s.iterations
+            ni += 1
+        io = self._io_delta(snap)
+        return BatchMaintStats(
+            algorithm=f"batch({insert_algorithm})",
+            num_deletes=nd,
+            num_inserts=ni,
+            num_noops=noop,
+            node_computations=comp,
+            edge_block_reads=io[0],
+            node_table_reads=io[1],
+            iterations=iters,
+            num_changed=int((self.core != core0).sum()),
         )
 
     # =====================================================================

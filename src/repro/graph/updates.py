@@ -28,6 +28,15 @@ class BufferedGraph:
         self._size = 0
         self._deg_delta = np.zeros(graph.n, dtype=np.int64)
         self.flushes = 0
+        self._flush_hooks: list = []
+
+    def add_flush_hook(self, fn) -> None:
+        """Register ``fn(self)`` to run after every CSR rewrite (flush).
+
+        The streaming service uses this to observe storage epochs: a flush
+        invalidates any reader state pointed at the old CSR arrays.
+        """
+        self._flush_hooks.append(fn)
 
     # ------------------------------------------------------------------ state
     @property
@@ -130,6 +139,8 @@ class BufferedGraph:
         self._size = 0
         self._deg_delta[:] = 0
         self.flushes += 1
+        for fn in self._flush_hooks:
+            fn(self)
 
     def materialize(self) -> CSRGraph:
         """Flush and return the up-to-date CSR."""

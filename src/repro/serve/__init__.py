@@ -1,3 +1,13 @@
 from .engine import ServeEngine
+from .registry import (available_services, create_service, register_service,
+                       service_factory)
+from ..stream import CoreService
 
-__all__ = ["ServeEngine"]
+register_service("lm", ServeEngine)
+register_service("core-stream", CoreService)
+
+__all__ = [
+    "ServeEngine", "CoreService",
+    "register_service", "service_factory", "create_service",
+    "available_services",
+]

@@ -1,0 +1,19 @@
+"""Streaming core-graph service: online coreness queries over an edge stream.
+
+Built on the paper's §V maintenance algorithms: ``CoreService`` owns the
+semi-external node state, ingests insert/delete micro-batches through
+``CoreMaintainer``/``BufferedGraph``, and serves epoch-versioned reads with
+zero edge-table I/O.  WAL + snapshots give crash recovery via warm restart
+(DESIGN.md §9).
+"""
+from .admission import AdmittedBatch, admit_batch
+from .service import BatchStats, CoreService, EpochView, RecoveryStats
+from .wal import SnapshotStore, WriteAheadLog
+from .workload import mixed_stream
+
+__all__ = [
+    "AdmittedBatch", "admit_batch",
+    "BatchStats", "CoreService", "EpochView", "RecoveryStats",
+    "SnapshotStore", "WriteAheadLog",
+    "mixed_stream",
+]

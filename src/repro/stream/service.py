@@ -1,0 +1,396 @@
+"""CoreService: online coreness queries over a live edge stream.
+
+The paper's semi-external contract — O(n) node state in memory, edge table on
+disk — is exactly the shape of a long-lived serving process, and §V's
+maintenance algorithms are built for continuous updates.  ``CoreService``
+packages them as a service:
+
+* **writes** — an edge-update stream ingested in micro-batches.  Each batch
+  is admitted (normalized / coalesced / deletes-first, see admission.py),
+  logged to the write-ahead log, then applied through
+  ``CoreMaintainer.apply_batch`` (SemiDelete* + SemiInsert*), keeping
+  ``core``/``cnt`` exact after every batch;
+* **reads** — ``coreness``, k-core membership, top-k by coreness and the
+  degeneracy, answered from an immutable *epoch view*: a frozen copy of the
+  O(n) node arrays published atomically after each batch commit.  Readers
+  never observe a half-applied batch, and the query path performs **zero
+  edge-table I/O** — it never touches the BlockReader.  Set queries are
+  memoized in an LRU cache that is invalidated on every epoch publish;
+* **durability** — the WAL records a batch before it is applied; periodic
+  snapshots dump (epoch, CSR, core, cnt) atomically.  Recovery replays the
+  WAL tail structurally and warm-restarts SemiCore* from a provable upper
+  bound instead of recomputing from scratch (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.maintenance import CoreMaintainer
+from ..core.semicore import HostEngine
+from ..core.localcore import compute_cnt_batch
+from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
+from ..graph.updates import BufferedGraph
+from .admission import AdmittedBatch, admit_batch
+from .wal import SnapshotStore, WriteAheadLog
+
+__all__ = ["EpochView", "BatchStats", "RecoveryStats", "CoreService"]
+
+
+# ===================================================================== views
+@dataclass(frozen=True)
+class EpochView:
+    """Immutable snapshot of the node state at one epoch.
+
+    Holds only the O(n) in-memory arrays (read-only); every query below is a
+    pure vectorized lookup with no edge-table I/O.
+    """
+
+    epoch: int
+    core: np.ndarray  # (n,) int64, writeable=False
+    deg: np.ndarray  # (n,) int64, writeable=False
+
+    @property
+    def n(self) -> int:
+        return len(self.core)
+
+    def coreness(self, v):
+        """Core number of node ``v`` (int) or of an array of nodes."""
+        if np.isscalar(v) or isinstance(v, (int, np.integer)):
+            return int(self.core[int(v)])
+        return self.core[np.asarray(v, dtype=np.int64)]
+
+    def in_kcore(self, v, k: int):
+        """Membership of ``v`` (scalar or array) in the k-core."""
+        if np.isscalar(v) or isinstance(v, (int, np.integer)):
+            return bool(self.core[int(v)] >= k)
+        return self.core[np.asarray(v, dtype=np.int64)] >= k
+
+    def kcore_members(self, k: int) -> np.ndarray:
+        return np.flatnonzero(self.core >= k)
+
+    def kcore_size(self, k: int) -> int:
+        return int((self.core >= k).sum())
+
+    def top_k(self, k: int) -> np.ndarray:
+        """Node ids of the k highest-coreness nodes (ties: lower id first)."""
+        n = self.n
+        k = min(int(k), n)
+        if k <= 0:
+            return np.empty(0, dtype=np.int64)
+        # partial-select then order, on a tie-free composite key
+        # (coreness desc, node id asc): O(n + k log k)
+        key = self.core * np.int64(n) - np.arange(n, dtype=np.int64)
+        idx = np.argpartition(-key, k - 1)[:k]
+        return idx[np.argsort(-key[idx])].astype(np.int64)
+
+    def degeneracy(self) -> int:
+        return int(self.core.max()) if self.n else 0
+
+    def core_histogram(self) -> np.ndarray:
+        """hist[c] = number of nodes with coreness exactly c."""
+        return np.bincount(self.core, minlength=self.degeneracy() + 1)
+
+
+# ===================================================================== stats
+@dataclass
+class BatchStats:
+    """Per-batch admission + maintenance + I/O stats (DecompResult style)."""
+
+    epoch: int
+    num_requested: int
+    num_dropped: int
+    num_coalesced: int
+    num_applied_deletes: int
+    num_applied_inserts: int
+    num_noops: int
+    node_computations: int
+    edge_block_reads: int
+    node_table_reads: int
+    iterations: int
+    num_changed: int
+    flushes: int
+    wall_time_s: float
+
+
+@dataclass
+class RecoveryStats:
+    """What recovery did, and what it cost vs. a cold decomposition."""
+
+    snapshot_epoch: int
+    recovered_epoch: int
+    replayed_batches: int
+    replayed_updates: int
+    applied_deletes: int
+    applied_inserts: int
+    warm_restart: bool  # False => no WAL tail, snapshot state used as-is
+    settle_node_computations: int = 0
+    settle_iterations: int = 0
+    settle_edge_block_reads: int = 0
+
+
+class _LRUCache:
+    """Tiny LRU for set-valued queries; cleared on every epoch publish."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
+# =================================================================== service
+class CoreService:
+    """Owns the semi-external node state and serves it under a live stream."""
+
+    def __init__(
+        self,
+        graph,
+        *,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        insert_algorithm: str = "semiinsert*",
+        wal_path: str | None = None,
+        wal_fsync: bool = False,
+        snapshot_dir: str | None = None,
+        snapshot_every: int = 0,
+        cache_size: int = 256,
+        state: tuple[np.ndarray, np.ndarray] | None = None,
+        epoch: int = 0,
+    ):
+        self.maintainer = CoreMaintainer(graph, block_edges, state=state)
+        self.bg: BufferedGraph = self.maintainer.bg
+        self.insert_algorithm = insert_algorithm
+        self.epoch = int(epoch)
+        self.wal = WriteAheadLog(wal_path, fsync=wal_fsync) if wal_path else None
+        self.snapshots = SnapshotStore(snapshot_dir) if snapshot_dir else None
+        self.snapshot_every = int(snapshot_every)
+        self._batches_since_snapshot = 0
+        self.cache = _LRUCache(cache_size)
+        self.batch_log: list[BatchStats] = []
+        self._flush_events = 0
+        self.bg.add_flush_hook(self._on_flush)
+        self._publish()
+
+    # ------------------------------------------------------------ internals
+    def _on_flush(self, bg: BufferedGraph) -> None:
+        # storage epoch turned over: the CSR was rewritten under the engine
+        # (HostEngine re-syncs lazily; we only account the event here)
+        self._flush_events += 1
+
+    def _publish(self) -> None:
+        """Commit the current node state as the readable epoch view."""
+        core = self.maintainer.core.copy()
+        core.setflags(write=False)
+        deg = np.asarray(self.bg.degrees(), dtype=np.int64)
+        deg.setflags(write=False)
+        self._view = EpochView(self.epoch, core, deg)
+        self.cache.clear()
+
+    # -------------------------------------------------------------- queries
+    def view(self) -> EpochView:
+        """The current committed epoch view (stable across later ingests)."""
+        return self._view
+
+    def coreness(self, v):
+        return self._view.coreness(v)
+
+    def in_kcore(self, v, k: int):
+        return self._view.in_kcore(v, k)
+
+    def kcore_members(self, k: int) -> np.ndarray:
+        key = (self._view.epoch, "kcore", int(k))
+        out = self.cache.get(key)
+        if out is None:
+            out = self._view.kcore_members(k)
+            out.setflags(write=False)  # hits are shared across callers
+            self.cache.put(key, out)
+        return out
+
+    def top_k(self, k: int) -> np.ndarray:
+        key = (self._view.epoch, "topk", int(k))
+        out = self.cache.get(key)
+        if out is None:
+            out = self._view.top_k(k)
+            out.setflags(write=False)  # hits are shared across callers
+            self.cache.put(key, out)
+        return out
+
+    def degeneracy(self) -> int:
+        return self._view.degeneracy()
+
+    # --------------------------------------------------------------- writes
+    def ingest(self, ops) -> BatchStats:
+        """Admit + log + apply one micro-batch; commit a new epoch view."""
+        t0 = time.perf_counter()
+        admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
+        next_epoch = self.epoch + 1
+        if self.wal is not None:  # write-ahead: log before touching state
+            self.wal.append(next_epoch, admitted.deletes, admitted.inserts)
+        flushes0 = self._flush_events
+        m = self.maintainer.apply_batch(
+            admitted.deletes, admitted.inserts, self.insert_algorithm
+        )
+        self.epoch = next_epoch
+        self._publish()
+        stats = BatchStats(
+            epoch=self.epoch,
+            num_requested=admitted.num_requested,
+            num_dropped=admitted.num_dropped,
+            num_coalesced=admitted.num_coalesced,
+            num_applied_deletes=m.num_deletes,
+            num_applied_inserts=m.num_inserts,
+            num_noops=m.num_noops,
+            node_computations=m.node_computations,
+            edge_block_reads=m.edge_block_reads,
+            node_table_reads=m.node_table_reads,
+            iterations=m.iterations,
+            num_changed=m.num_changed,
+            flushes=self._flush_events - flushes0,
+            wall_time_s=time.perf_counter() - t0,
+        )
+        self.batch_log.append(stats)
+        self._batches_since_snapshot += 1
+        if (
+            self.snapshots is not None
+            and self.snapshot_every > 0
+            and self._batches_since_snapshot >= self.snapshot_every
+        ):
+            self.snapshot()
+        return stats
+
+    def snapshot(self) -> None:
+        """Flush the update buffer and atomically dump the durable state."""
+        if self.snapshots is None:
+            raise RuntimeError("CoreService was built without a snapshot_dir")
+        g = self.bg.materialize()
+        self.snapshots.save(self.epoch, g, self.maintainer.core, self.maintainer.cnt)
+        self._batches_since_snapshot = 0
+
+    def close(self) -> None:
+        if self.wal is not None:
+            self.wal.close()
+
+    # ---------------------------------------------------------------- stats
+    def service_stats(self) -> dict:
+        reader = self.maintainer.engine.reader
+        return {
+            "epoch": self.epoch,
+            "n": self.bg.n,
+            "m": self.bg.m,
+            "degeneracy": self.degeneracy(),
+            "batches": len(self.batch_log),
+            "updates_applied": sum(
+                s.num_applied_deletes + s.num_applied_inserts for s in self.batch_log
+            ),
+            "edge_block_reads_total": reader.reads,
+            "node_table_reads_total": reader.node_table_reads,
+            "flush_events": self._flush_events,
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "wal_appends": self.wal.appends if self.wal else 0,
+        }
+
+    # ------------------------------------------------------------- recovery
+    @classmethod
+    def recover(
+        cls,
+        *,
+        wal_path: str | None = None,
+        snapshot_dir: str | None = None,
+        base_graph: CSRGraph | None = None,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        **service_kwargs,
+    ) -> tuple["CoreService", RecoveryStats]:
+        """Rebuild a service from snapshot + WAL tail, without full recompute.
+
+        The warm restart leans on convergence-from-above (Thm 4.1): with the
+        WAL tail replayed structurally, ``min(snapshot_core + I, deg)`` — I
+        the number of net-inserted tail edges, since one insertion raises any
+        core by at most one and deletions never raise it — is a pointwise
+        upper bound of the true decomposition, so SemiCore* passes from it
+        (with ``cnt`` recomputed exactly once) settle to the exact fixpoint.
+        """
+        snap = SnapshotStore(snapshot_dir).latest() if snapshot_dir else None
+        if snap is not None:
+            epoch0, g, core0, cnt0 = snap
+        elif base_graph is not None:
+            epoch0, g, core0, cnt0 = 0, base_graph, None, None
+        else:
+            raise ValueError("recover() needs a snapshot_dir with a snapshot "
+                             "or a base_graph")
+
+        bg = BufferedGraph(g)
+        applied_d = applied_i = batches = updates = 0
+        last_epoch = epoch0
+        if wal_path is not None:
+            for e, dels, ins in WriteAheadLog.replay(wal_path, after_epoch=epoch0):
+                batches += 1
+                updates += len(dels) + len(ins)
+                for u, v in dels:
+                    applied_d += bool(bg.delete_edge(int(u), int(v)))
+                for u, v in ins:
+                    applied_i += bool(bg.insert_edge(int(u), int(v)))
+                last_epoch = max(last_epoch, e)
+
+        state = None
+        settle = None
+        warm_restart = False
+        if core0 is not None:
+            if applied_d or applied_i:
+                warm_restart = True
+                bg.flush()  # one CSR rewrite so the settle scans exact lists
+                eng = HostEngine(bg, block_edges)
+                warm = np.minimum(
+                    np.asarray(core0, dtype=np.int64) + applied_i, bg.degrees()
+                )
+                vals, seg_ptr, _ = eng._gather(np.arange(bg.n, dtype=np.int64), warm)
+                cnt = compute_cnt_batch(vals, seg_ptr, warm)
+                settle = eng.semicore_star("batch", core=warm, cnt=cnt)
+                state = (settle.core, settle.cnt)
+            else:
+                state = (core0, cnt0)
+
+        svc = cls(
+            bg,
+            block_edges=block_edges,
+            wal_path=wal_path,
+            snapshot_dir=snapshot_dir,
+            state=state,
+            epoch=last_epoch,
+            **service_kwargs,
+        )
+        stats = RecoveryStats(
+            snapshot_epoch=epoch0,
+            recovered_epoch=last_epoch,
+            replayed_batches=batches,
+            replayed_updates=updates,
+            applied_deletes=applied_d,
+            applied_inserts=applied_i,
+            warm_restart=warm_restart,
+            settle_node_computations=settle.node_computations if settle else 0,
+            settle_iterations=settle.iterations if settle else 0,
+            settle_edge_block_reads=settle.edge_block_reads if settle else 0,
+        )
+        return svc, stats

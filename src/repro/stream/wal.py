@@ -1,0 +1,145 @@
+"""Durability for the streaming core service: write-ahead log + snapshots.
+
+The service's durable state is tiny — the O(n) node arrays (``core``,
+``cnt``) plus the graph itself — which the paper's semi-external contract
+already forces through a disk-resident edge table.  Crash recovery therefore
+needs only:
+
+* a **write-ahead log**: one JSON line per admitted micro-batch, appended
+  (and optionally fsynced) *before* the batch is applied.  A crash mid-append
+  leaves a torn final line, which replay ignores — that batch was never
+  acknowledged;
+* a **snapshot store**: periodic atomic dumps of (epoch, CSR graph, core,
+  cnt).  Snapshots are written to a temp directory and published with
+  ``os.replace`` so a crash never exposes a half-written snapshot.
+
+Recovery = latest snapshot + structural replay of the WAL tail + a warm
+SemiCore* settle (see service.recover; DESIGN.md §9 for the upper-bound
+argument).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+
+from ..graph.storage import CSRGraph
+
+__all__ = ["WriteAheadLog", "SnapshotStore"]
+
+
+class WriteAheadLog:
+    """Append-only JSONL of admitted micro-batches, keyed by epoch."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._truncate_torn_tail(path)
+        self._f = open(path, "a", encoding="utf-8")
+        self.appends = 0
+
+    @staticmethod
+    def _truncate_torn_tail(path: str) -> None:
+        """Drop a crash-torn final line so new appends never concatenate
+        onto it (a merged line would corrupt the *next* recovery)."""
+        if not os.path.exists(path):
+            return
+        with open(path, "rb+") as f:
+            data = f.read()
+            if not data or data.endswith(b"\n"):
+                return
+            cut = data.rfind(b"\n") + 1  # 0 when the only line is torn
+            f.truncate(cut)
+
+    def append(self, epoch: int, deletes, inserts) -> None:
+        rec = {
+            "epoch": int(epoch),
+            "del": [[int(u), int(v)] for u, v in deletes],
+            "ins": [[int(u), int(v)] for u, v in inserts],
+        }
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        self.appends += 1
+
+    def close(self) -> None:
+        self._f.close()
+
+    @staticmethod
+    def replay(path: str, after_epoch: int = -1):
+        """Yield ``(epoch, deletes, inserts)`` for batches past ``after_epoch``.
+
+        A torn (crash-interrupted) final line is skipped; corruption anywhere
+        else is a real error and raises.
+        """
+        if not os.path.exists(path):
+            return
+        with open(path, "r", encoding="utf-8") as f:
+            lines = f.readlines()
+        for i, line in enumerate(lines):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    return  # torn tail: the batch was never acknowledged
+                raise
+            if rec["epoch"] <= after_epoch:
+                continue
+            yield (
+                rec["epoch"],
+                [tuple(e) for e in rec["del"]],
+                [tuple(e) for e in rec["ins"]],
+            )
+
+
+class SnapshotStore:
+    """Atomic (epoch, graph, core, cnt) snapshots; only the latest is kept."""
+
+    PREFIX = "snap_"
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, epoch: int) -> str:
+        return os.path.join(self.root, f"{self.PREFIX}{epoch:012d}")
+
+    def save(self, epoch: int, graph: CSRGraph, core: np.ndarray, cnt: np.ndarray) -> str:
+        tmp = os.path.join(self.root, ".snap_tmp")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        graph.save(tmp)
+        np.save(os.path.join(tmp, "core.npy"), np.asarray(core, dtype=np.int64))
+        np.save(os.path.join(tmp, "cnt.npy"), np.asarray(cnt, dtype=np.int64))
+        with open(os.path.join(tmp, "epoch.json"), "w") as f:
+            json.dump({"epoch": int(epoch)}, f)
+        final = self._dir(epoch)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # publish atomically
+        for name in os.listdir(self.root):  # GC superseded snapshots
+            if name.startswith(self.PREFIX) and os.path.join(self.root, name) != final:
+                shutil.rmtree(os.path.join(self.root, name))
+        return final
+
+    def latest(self):
+        """Return ``(epoch, graph, core, cnt)`` or None when no snapshot."""
+        snaps = sorted(
+            n for n in os.listdir(self.root) if n.startswith(self.PREFIX)
+        )
+        if not snaps:
+            return None
+        d = os.path.join(self.root, snaps[-1])
+        with open(os.path.join(d, "epoch.json")) as f:
+            epoch = json.load(f)["epoch"]
+        graph = CSRGraph.load(d, mmap=False)
+        core = np.load(os.path.join(d, "core.npy"))
+        cnt = np.load(os.path.join(d, "cnt.npy"))
+        return epoch, graph, core, cnt
