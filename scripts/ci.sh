@@ -10,3 +10,7 @@ python -m pip install -q -r requirements-dev.txt \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
+
+# out-of-core smoke: build a ~1M-edge graph from chunks in a temp dir,
+# memmap-load it, decompose, and compare against the in-memory build
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_outofcore.py --smoke

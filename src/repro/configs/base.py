@@ -116,6 +116,10 @@ class CoreGraphConfig:
     m_directed: int
     max_deg: int
     kind: str = "coregraph"
+    block_edges: int = 4096      # edge-table block size (storage.DEFAULT_BLOCK_EDGES)
+    pool_blocks: int = 1         # BlockReader LRU pool; 1 = paper's single buffer
+    build_chunk_edges: int = 1 << 22  # out-of-core build ingest chunk (build.py)
 
     def reduced(self) -> "CoreGraphConfig":
-        return replace(self, n=2000, m_directed=16_000, max_deg=64)
+        return replace(self, n=2000, m_directed=16_000, max_deg=64,
+                       build_chunk_edges=1 << 12)

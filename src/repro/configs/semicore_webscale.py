@@ -1,11 +1,31 @@
 """The paper's own workload at Table-I scale: Clueweb / UK / Twitter-sized
-semi-external core decomposition cells (directed edge counts = 2m)."""
+semi-external core decomposition cells (directed edge counts = 2m).
+
+``pool_blocks`` sizes the BlockReader LRU buffer pool (DESIGN.md §10): the
+paper's experiments use a single block buffer (``pool_blocks=1``); the pooled
+variants model a realistic page cache for skip-heavy SemiCore+/SemiCore*
+passes over interleaved adjacency lists.  ``build_chunk_edges`` is the ingest
+chunk of the external-memory CSR builder (graph/build.py): peak build memory
+is O(n) node state + O(build_chunk_edges) scratch, never O(m).
+"""
 from .base import CoreGraphConfig
 
 CLUEWEB = CoreGraphConfig(name="semicore-clueweb", n=978_408_098,
-                          m_directed=85_148_214_938, max_deg=75_611_696)
+                          m_directed=85_148_214_938, max_deg=75_611_696,
+                          block_edges=4096, pool_blocks=1,
+                          build_chunk_edges=1 << 24)
 UK = CoreGraphConfig(name="semicore-uk", n=105_896_555,
-                     m_directed=7_477_467_296, max_deg=975_419)
+                     m_directed=7_477_467_296, max_deg=975_419,
+                     block_edges=4096, pool_blocks=1,
+                     build_chunk_edges=1 << 24)
 TWITTER = CoreGraphConfig(name="semicore-twitter", n=41_652_230,
-                          m_directed=2_936_730_364, max_deg=2_997_487)
+                          m_directed=2_936_730_364, max_deg=2_997_487,
+                          block_edges=4096, pool_blocks=1,
+                          build_chunk_edges=1 << 24)
+# Pooled variant: same Clueweb cell with a 256-block (~4 MiB) page cache for
+# the skip-heavy maintenance / SemiCore* passes.
+CLUEWEB_POOLED = CoreGraphConfig(name="semicore-clueweb-pooled",
+                                 n=978_408_098, m_directed=85_148_214_938,
+                                 max_deg=75_611_696, block_edges=4096,
+                                 pool_blocks=256, build_chunk_edges=1 << 24)
 CONFIG = CLUEWEB

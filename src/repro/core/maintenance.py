@@ -64,9 +64,10 @@ class CoreMaintainer:
         graph,
         block_edges: int = DEFAULT_BLOCK_EDGES,
         state: tuple[np.ndarray, np.ndarray] | None = None,
+        pool_blocks: int = 1,
     ):
         self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
-        self.engine = HostEngine(self.bg, block_edges)
+        self.engine = HostEngine(self.bg, block_edges, pool_blocks=pool_blocks)
         if state is None:
             r = self.engine.semicore_star("seq")
             self.core, self.cnt = r.core, r.cnt

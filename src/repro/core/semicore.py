@@ -57,9 +57,18 @@ class DecompResult:
 
 
 class HostEngine:
-    """Host-side semi-external engine over blocked storage (+ update buffer)."""
+    """Host-side semi-external engine over blocked storage (+ update buffer).
 
-    def __init__(self, graph, block_edges: int = DEFAULT_BLOCK_EDGES):
+    ``pool_blocks`` sizes the :class:`BlockReader` LRU buffer pool; the
+    default of 1 is the paper's single-buffer model (DESIGN.md §10).
+    """
+
+    def __init__(
+        self,
+        graph,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
+    ):
         if isinstance(graph, BufferedGraph):
             self.buffered: BufferedGraph | None = graph
             base = graph.base
@@ -67,7 +76,7 @@ class HostEngine:
             self.buffered = None
             base = graph
         self.graph = base
-        self.reader = BlockReader(base, block_edges)
+        self.reader = BlockReader(base, block_edges, pool_blocks=pool_blocks)
 
     # ------------------------------------------------------------------ reads
     def _sync(self) -> None:
@@ -75,7 +84,7 @@ class HostEngine:
         if self.buffered is not None and self.buffered.base is not self.graph:
             self.graph = self.buffered.base
             self.reader.graph = self.graph
-            self.reader._buffered = -1
+            self.reader.invalidate()  # resident blocks belong to the old CSR
 
     def nbrs(self, v: int) -> np.ndarray:
         self._sync()
@@ -345,7 +354,9 @@ class HostEngine:
             nbr_flat = np.asarray(g.adj)[flat]
         else:
             nbr_flat = np.empty(0, dtype=np.int32)
-        # block I/O: union of [lo//B, hi-1//B] intervals (single-buffer scan)
+        # block I/O: union of [lo//B, hi-1//B] intervals, streamed through the
+        # reader's buffer pool in ascending order (single buffer when
+        # pool_blocks == 1, LRU page cache otherwise)
         B = self.reader.block_edges
         nz = lens > 0
         if nz.any():
@@ -356,7 +367,43 @@ class HostEngine:
             np.add.at(diff, first, 1)
             np.add.at(diff, last + 1, -1)
             covered = np.cumsum(diff[:-1]) > 0
-            self.reader.reads += int(covered.sum())
+            self.reader.charge_pass(np.flatnonzero(covered))
+        # merge buffered edge deltas (in-memory, no extra block I/O): locate
+        # the dirty nodes vectorized and splice only their segments, so a
+        # handful of buffered updates costs O(|dirty|) Python work plus the
+        # unavoidable flat-array copy — never a loop over the whole frontier
+        if self.buffered is not None and self.buffered._size:
+            dirty = np.fromiter(
+                self.buffered._ins.keys() | self.buffered._del.keys(),
+                dtype=np.int64,
+            )
+            hit = np.flatnonzero(np.isin(nodes, dirty))
+            if len(hit):
+                merged = [
+                    np.asarray(
+                        self.buffered.merged_neighbors(
+                            int(nodes[i]), nbr_flat[seg_ptr[i] : seg_ptr[i + 1]]
+                        ),
+                        dtype=np.int32,
+                    )
+                    for i in hit
+                ]
+                new_lens = np.diff(seg_ptr)
+                new_lens[hit] = [len(s) for s in merged]
+                new_ptr = np.zeros(len(nodes) + 1, dtype=np.int64)
+                np.cumsum(new_lens, out=new_ptr[1:])
+                out = np.empty(int(new_ptr[-1]), dtype=np.int32)
+                prev_old = 0
+                prev_new = 0
+                for seg, i in zip(merged, hit):
+                    span = int(seg_ptr[i]) - prev_old  # untouched run before i
+                    out[prev_new : prev_new + span] = nbr_flat[prev_old : prev_old + span]
+                    prev_new += span
+                    out[prev_new : prev_new + len(seg)] = seg
+                    prev_new += len(seg)
+                    prev_old = int(seg_ptr[i + 1])
+                out[prev_new:] = nbr_flat[prev_old:]
+                nbr_flat, seg_ptr = out, new_ptr
         return core[nbr_flat], seg_ptr, nbr_flat
 
     def _result(self, core, cnt, iters, comp, algo, schedule, upd, cpt) -> DecompResult:
@@ -379,9 +426,10 @@ def decompose(
     algorithm: str = "semicore*",
     schedule: str = "batch",
     block_edges: int = DEFAULT_BLOCK_EDGES,
+    pool_blocks: int = 1,
 ) -> DecompResult:
     """One-call core decomposition with the chosen paper algorithm."""
-    eng = HostEngine(graph, block_edges)
+    eng = HostEngine(graph, block_edges, pool_blocks=pool_blocks)
     if algorithm == "semicore":
         return eng.semicore(schedule)
     if algorithm == "semicore+":

@@ -9,6 +9,11 @@ graphs with matching *structural regimes* instead:
   * ``ba``        -- Barabási–Albert preferential attachment.
 
 All generators are deterministic in ``seed`` and return :class:`CSRGraph`.
+
+The ``*_chunks`` variants stream the same structural regimes as ``(k, 2)``
+edge chunks instead of whole arrays — O(chunk) memory per draw — and feed the
+external-memory builder (:func:`repro.graph.build.build_csr`) so multi-10M-edge
+synthetic webs never materialize an edge list (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -16,7 +21,10 @@ import numpy as np
 
 from .storage import CSRGraph
 
-__all__ = ["chung_lu", "rmat", "erdos_renyi", "ba", "DATASET_SUITE", "make_dataset"]
+__all__ = [
+    "chung_lu", "rmat", "erdos_renyi", "ba", "DATASET_SUITE", "make_dataset",
+    "rmat_chunks", "powerlaw_chunks", "uniform_chunks",
+]
 
 
 def erdos_renyi(n: int, m: int, seed: int = 0) -> CSRGraph:
@@ -43,21 +51,17 @@ def chung_lu(n: int, m: int, gamma: float = 2.5, seed: int = 0) -> CSRGraph:
 
 def rmat(scale: int, edge_factor: int = 16, a: float = 0.57, b: float = 0.19,
          c: float = 0.19, seed: int = 0) -> CSRGraph:
-    """R-MAT / Kronecker generator (web-graph-like skew), n = 2**scale."""
+    """R-MAT / Kronecker generator (web-graph-like skew), n = 2**scale.
+
+    Materialized via the streaming generator: with one chunk covering every
+    edge the RNG is consumed in the same order, so this is the single source
+    of the quadrant recursion (see :func:`rmat_chunks`).
+    """
     n = 1 << scale
     m = n * edge_factor
-    rng = np.random.default_rng(seed)
-    src = np.zeros(m, dtype=np.int64)
-    dst = np.zeros(m, dtype=np.int64)
-    for bit in range(scale):
-        r1 = rng.random(m)
-        r2 = rng.random(m)
-        src_bit = r1 > (a + b)
-        ab = np.where(src_bit, c / (c + (1 - a - b - c)), a / (a + b))
-        dst_bit = r2 > ab
-        src |= src_bit.astype(np.int64) << bit
-        dst |= dst_bit.astype(np.int64) << bit
-    e = np.stack([src, dst], axis=1)
+    e = np.concatenate(
+        list(rmat_chunks(scale, edge_factor, a, b, c, seed, chunk_edges=m))
+    )
     return CSRGraph.from_edges(n, e)
 
 
@@ -75,6 +79,67 @@ def ba(n: int, attach: int = 4, seed: int = 0) -> CSRGraph:
         idx = rng.integers(0, len(repeated), size=attach)
         targets = [repeated[i] for i in idx]
     return CSRGraph.from_edges(n, np.array(edges, dtype=np.int64))
+
+
+# --------------------------------------------------------------------------
+# Streaming chunk generators (out-of-core ingestion; DESIGN.md §10).  Each
+# yields (k, 2) int64 edge chunks, deterministic in ``seed``; duplicates and
+# self loops are the builder's problem (it dedups/drops while merging).
+def rmat_chunks(scale: int, edge_factor: int = 16, a: float = 0.57,
+                b: float = 0.19, c: float = 0.19, seed: int = 0,
+                chunk_edges: int = 1 << 20):
+    """Stream R-MAT edges (n = 2**scale, ~n * edge_factor raw draws)."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    for lo in range(0, m, chunk_edges):
+        k = min(chunk_edges, m - lo)
+        src = np.zeros(k, dtype=np.int64)
+        dst = np.zeros(k, dtype=np.int64)
+        for bit in range(scale):
+            r1 = rng.random(k)
+            r2 = rng.random(k)
+            src_bit = r1 > (a + b)
+            ab = np.where(src_bit, c / (c + (1 - a - b - c)), a / (a + b))
+            dst_bit = r2 > ab
+            src |= src_bit.astype(np.int64) << bit
+            dst |= dst_bit.astype(np.int64) << bit
+        yield np.stack([src, dst], axis=1)
+
+
+def powerlaw_chunks(n: int, m: int, gamma: float = 2.5, seed: int = 0,
+                    chunk_edges: int = 1 << 20):
+    """Stream Chung-Lu power-law edges: endpoints ~ w_i ∝ (i + i0)^(-1/(γ-1)).
+
+    Endpoint draws use inverse-transform sampling over the weight cumsum, so
+    per-chunk work is O(chunk log n) with no renormalization.  Persistent
+    state is O(n) — the weight cumsum plus the id permutation decorrelating
+    id from degree — which is the paper's node-state budget, not an edge
+    list.
+    """
+    rng = np.random.default_rng(seed)
+    i0 = n ** (1.0 / (gamma - 1.0)) / 10.0 + 1.0
+    alpha = -1.0 / (gamma - 1.0)
+    # cumulative weights of (i + i0)**alpha approximated by the integral's
+    # closed form would drift from the discrete sum; n is at most the node
+    # count we can hold anyway (O(n) is in-budget), so keep the exact cumsum.
+    w = (np.arange(n) + i0) ** alpha
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+    perm = rng.permutation(n)  # decorrelate id and degree
+    for lo in range(0, m, chunk_edges):
+        k = min(chunk_edges, m - lo)
+        src = np.searchsorted(cdf, rng.random(k), side="left")
+        dst = np.searchsorted(cdf, rng.random(k), side="left")
+        yield np.stack([perm[src], perm[dst]], axis=1).astype(np.int64)
+
+
+def uniform_chunks(n: int, m: int, seed: int = 0, chunk_edges: int = 1 << 20):
+    """Stream uniform (Erdős–Rényi-style) endpoint pairs."""
+    rng = np.random.default_rng(seed)
+    for lo in range(0, m, chunk_edges):
+        k = min(chunk_edges, m - lo)
+        yield rng.integers(0, n, size=(k, 2), dtype=np.int64)
 
 
 # --------------------------------------------------------------------------

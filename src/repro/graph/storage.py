@@ -10,11 +10,21 @@ Two backings are provided:
   * in-memory numpy arrays (tests, benchmarks, generators), and
   * on-disk ``.npy`` files opened with ``np.memmap`` (true out-of-core runs),
 both behind the same :class:`CSRGraph` interface.
+
+Graphs too large for ``CSRGraph.from_edges`` (whole-array sorts) are built by
+the external-memory pipeline in :mod:`repro.graph.build`, which emits this
+exact on-disk layout with O(n) + O(chunk) peak memory (DESIGN.md §10).
+
+:class:`BlockReader` models the paper's single in-memory block buffer; the
+``pool_blocks`` parameter generalizes it to an LRU buffer pool (a realistic
+page cache) while keeping ``pool_blocks=1`` bit-identical to the paper's
+accounting — see DESIGN.md §10 for the exact semantics.
 """
 from __future__ import annotations
 
 import json
 import os
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -171,14 +181,27 @@ class BlockReader:
     other block costs one read I/O.  Sequential full scans therefore cost
     ``ceil(2m / B)`` I/Os, and skip-heavy scans (SemiCore+/SemiCore*) cost one
     I/O per *distinct* block actually touched, exactly as in the paper.
+
+    ``pool_blocks`` generalizes the single buffer to an LRU buffer pool
+    (DESIGN.md §10): a read of a pool-resident block is a hit (free), a miss
+    costs one read I/O and evicts the least-recently-used block.
+    ``pool_blocks=1`` degenerates to exactly the paper's single-buffer model —
+    every existing I/O trace is preserved bit-for-bit.
     """
 
-    def __init__(self, graph: CSRGraph, block_edges: int = DEFAULT_BLOCK_EDGES):
+    def __init__(
+        self,
+        graph: CSRGraph,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
+    ):
         self.graph = graph
         self.block_edges = int(block_edges)
+        self.pool_blocks = max(1, int(pool_blocks))
         self.reads = 0  # edge-table block read I/Os
         self.node_table_reads = 0  # node-table block read I/Os
-        self._buffered = -1  # currently buffered block id
+        self.hits = 0  # pool hits (reads answered from a resident block)
+        self._pool: OrderedDict[int, None] = OrderedDict()  # resident blocks, LRU order
         # node-table entries per block: entries are (offset 8B, degree 4B) =
         # 12 bytes; one block is block_edges * 4 bytes of edge data.
         self._node_entries_per_block = max(1, (self.block_edges * 4) // 12)
@@ -188,20 +211,95 @@ class BlockReader:
     def num_blocks(self) -> int:
         return -(-self.graph.num_directed // self.block_edges)
 
+    def invalidate(self) -> None:
+        """Drop every resident block (the backing CSR was rewritten)."""
+        self._pool.clear()
+
     def reset_io(self) -> None:
         self.reads = 0
         self.node_table_reads = 0
-        self._buffered = -1
+        self.hits = 0
+        self.invalidate()
 
     @property
     def bytes_read(self) -> int:
         return self.reads * self.block_edges * 4 + self.node_table_reads * self.block_edges * 4
 
+    @property
+    def resident_blocks(self) -> tuple[int, ...]:
+        """Resident block ids, least- to most-recently used."""
+        return tuple(self._pool)
+
     # -- access -------------------------------------------------------------
     def _touch(self, block: int) -> None:
-        if block != self._buffered:
-            self.reads += 1
-            self._buffered = block
+        pool = self._pool
+        if block in pool:
+            pool.move_to_end(block)
+            self.hits += 1
+            return
+        self.reads += 1
+        pool[block] = None
+        while len(pool) > self.pool_blocks:
+            pool.popitem(last=False)
+
+    def charge_pass(self, blocks: np.ndarray) -> None:
+        """Account one batch-schedule pass touching ``blocks`` (distinct,
+        ascending ids).
+
+        With ``pool_blocks == 1`` this reproduces the paper's single-buffer
+        accounting exactly: a batch pass streams the covered blocks through
+        the buffer in ascending order, so every distinct covered block costs
+        one read I/O per pass and the buffer state is left untouched (the
+        original implementation).  With a larger pool, blocks still resident
+        from earlier passes hit for free; LRU's inclusion property makes the
+        total read count non-increasing in ``pool_blocks``.
+
+        The pool>1 path simulates LRU exactly without touching every block in
+        Python: only blocks resident at pass start can hit (a once-evicted
+        block always has ≥ pool_blocks fresher distinct blocks until it is
+        re-read), and for a resident block at pass position ``i`` with
+        pass-start LRU rank ``rho`` the number of distinct fresher blocks at
+        its touch is ``i + (|resident| - 1 - rho) - #(prior pass touches of
+        residents fresher than rho)`` — so the hit test loops over at most
+        ``pool_blocks`` candidates while everything else stays vectorized.
+        """
+        blocks = np.asarray(blocks, dtype=np.int64)
+        k = len(blocks)
+        if self.pool_blocks == 1:
+            self.reads += k
+            return
+        if k == 0:
+            return
+        pool = self._pool
+        P = self.pool_blocks
+        hits = 0
+        resident = np.fromiter(pool.keys(), np.int64, len(pool))  # LRU -> MRU
+        if len(resident):
+            order = np.argsort(resident)
+            pos = np.searchsorted(resident[order], blocks)
+            pos = np.minimum(pos, len(resident) - 1)
+            cand = np.flatnonzero(resident[order][pos] == blocks)
+            rhos = order[pos[cand]]  # pass-start LRU rank of each candidate
+            nres = len(resident)
+            seen: list[int] = []
+            for i, rho in zip(cand.tolist(), rhos.tolist()):
+                fresher = i + (nres - 1 - rho) - sum(1 for r in seen if r > rho)
+                if fresher < P:
+                    hits += 1
+                seen.append(rho)
+        self.reads += k - hits
+        self.hits += hits
+        # post-pass pool: the P most recently touched distinct blocks =
+        # untouched residents (old recency order) then the pass tail
+        if len(resident):
+            untouched = resident[~np.isin(resident, blocks)]
+        else:
+            untouched = resident
+        pool.clear()
+        for b in untouched[max(0, len(untouched) + k - P):].tolist():
+            pool[b] = None
+        for b in blocks[max(0, k - P):].tolist():
+            pool[b] = None
 
     def load_neighbors(self, v: int) -> np.ndarray:
         """Load nbr(v), touching every block the adjacency list spans."""

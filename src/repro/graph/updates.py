@@ -8,8 +8,6 @@ rewritten ("flushed") and the buffer cleared.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-
 import numpy as np
 
 from .storage import CSRGraph
@@ -17,14 +15,40 @@ from .storage import CSRGraph
 __all__ = ["BufferedGraph"]
 
 
+def _pair_add(index: dict[int, set[int]], u: int, v: int) -> None:
+    index.setdefault(u, set()).add(v)
+    index.setdefault(v, set()).add(u)
+
+
+def _pair_discard(index: dict[int, set[int]], u: int, v: int) -> None:
+    """Drop (u, v) from both endpoint sets, removing emptied entries.
+
+    Keeping the index free of empty sets is part of the bounded-buffer
+    contract: its footprint must track the *buffered* updates, not every node
+    ever probed or touched.
+    """
+    for a, b in ((u, v), (v, u)):
+        s = index.get(a)
+        if s is not None:
+            s.discard(b)
+            if not s:
+                del index[a]
+
+
 class BufferedGraph:
-    """A CSRGraph plus an edge-update buffer with merged neighbor reads."""
+    """A CSRGraph plus an edge-update buffer with merged neighbor reads.
+
+    The two endpoint indexes ``_ins``/``_del`` are plain dicts, never
+    defaultdicts: membership probes on a defaultdict materialize an empty set
+    per probed node, which on a long stream of (mostly rejected) updates grows
+    the buffer O(#nodes-touched) and breaks the bounded-buffer contract.
+    """
 
     def __init__(self, graph: CSRGraph, buffer_capacity: int = 1 << 16):
         self.base = graph
         self.capacity = int(buffer_capacity)
-        self._ins: dict[int, set[int]] = defaultdict(set)
-        self._del: dict[int, set[int]] = defaultdict(set)
+        self._ins: dict[int, set[int]] = {}
+        self._del: dict[int, set[int]] = {}
         self._size = 0
         self._deg_delta = np.zeros(graph.n, dtype=np.int64)
         self.flushes = 0
@@ -58,17 +82,15 @@ class BufferedGraph:
         """Insert (u, v); returns False if the edge already exists."""
         if u == v:
             return False
-        if v in self._ins[u]:
+        if v in self._ins.get(u, ()):
             return False
-        if v in self._del[u]:  # re-inserting a buffered deletion
-            self._del[u].discard(v)
-            self._del[v].discard(u)
+        if v in self._del.get(u, ()):  # re-inserting a buffered deletion
+            _pair_discard(self._del, u, v)
             self._size -= 1
         else:
             if self.base.has_edge(u, v):
                 return False
-            self._ins[u].add(v)
-            self._ins[v].add(u)
+            _pair_add(self._ins, u, v)
             self._size += 1
         self._deg_delta[u] += 1
         self._deg_delta[v] += 1
@@ -77,17 +99,15 @@ class BufferedGraph:
 
     def delete_edge(self, u: int, v: int) -> bool:
         """Delete (u, v); returns False if the edge does not exist."""
-        if v in self._del[u]:
+        if v in self._del.get(u, ()):
             return False
-        if v in self._ins[u]:
-            self._ins[u].discard(v)
-            self._ins[v].discard(u)
+        if v in self._ins.get(u, ()):
+            _pair_discard(self._ins, u, v)
             self._size -= 1
         else:
             if not self.base.has_edge(u, v):
                 return False
-            self._del[u].add(v)
-            self._del[v].add(u)
+            _pair_add(self._del, u, v)
             self._size += 1
         self._deg_delta[u] -= 1
         self._deg_delta[v] -= 1

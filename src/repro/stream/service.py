@@ -170,6 +170,7 @@ class CoreService:
         graph,
         *,
         block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
         insert_algorithm: str = "semiinsert*",
         wal_path: str | None = None,
         wal_fsync: bool = False,
@@ -179,7 +180,9 @@ class CoreService:
         state: tuple[np.ndarray, np.ndarray] | None = None,
         epoch: int = 0,
     ):
-        self.maintainer = CoreMaintainer(graph, block_edges, state=state)
+        self.maintainer = CoreMaintainer(
+            graph, block_edges, state=state, pool_blocks=pool_blocks
+        )
         self.bg: BufferedGraph = self.maintainer.bg
         self.insert_algorithm = insert_algorithm
         self.epoch = int(epoch)
@@ -195,9 +198,12 @@ class CoreService:
 
     # ------------------------------------------------------------ internals
     def _on_flush(self, bg: BufferedGraph) -> None:
-        # storage epoch turned over: the CSR was rewritten under the engine
-        # (HostEngine re-syncs lazily; we only account the event here)
+        # storage epoch turned over: the CSR was rewritten under the engine.
+        # HostEngine re-points lazily on the next read, but the buffer pool
+        # holds blocks of the *old* edge table — drop them now so a pooled
+        # reader never serves stale hits across the rewrite.
         self._flush_events += 1
+        self.maintainer.engine.reader.invalidate()
 
     def _publish(self) -> None:
         """Commit the current node state as the readable epoch view."""
@@ -305,6 +311,8 @@ class CoreService:
                 s.num_applied_deletes + s.num_applied_inserts for s in self.batch_log
             ),
             "edge_block_reads_total": reader.reads,
+            "edge_block_hits_total": reader.hits,
+            "pool_blocks": reader.pool_blocks,
             "node_table_reads_total": reader.node_table_reads,
             "flush_events": self._flush_events,
             "cache_hits": self.cache.hits,
@@ -321,6 +329,7 @@ class CoreService:
         snapshot_dir: str | None = None,
         base_graph: CSRGraph | None = None,
         block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
         **service_kwargs,
     ) -> tuple["CoreService", RecoveryStats]:
         """Rebuild a service from snapshot + WAL tail, without full recompute.
@@ -361,7 +370,7 @@ class CoreService:
             if applied_d or applied_i:
                 warm_restart = True
                 bg.flush()  # one CSR rewrite so the settle scans exact lists
-                eng = HostEngine(bg, block_edges)
+                eng = HostEngine(bg, block_edges, pool_blocks=pool_blocks)
                 warm = np.minimum(
                     np.asarray(core0, dtype=np.int64) + applied_i, bg.degrees()
                 )
@@ -375,6 +384,7 @@ class CoreService:
         svc = cls(
             bg,
             block_edges=block_edges,
+            pool_blocks=pool_blocks,
             wal_path=wal_path,
             snapshot_dir=snapshot_dir,
             state=state,

@@ -1,0 +1,168 @@
+"""Differential battery: every algorithm × schedule × storage backing must
+agree with the in-memory BZ oracle (Algorithm 1) on seeded graph families.
+
+Backings:
+  * ``inmem``    — numpy arrays straight from the generator;
+  * ``memmap``   — the CSR saved to disk and reopened with ``np.memmap``
+                   (the true out-of-core edge table);
+  * ``buffered`` — a ``BufferedGraph`` whose base CSR *differs* from the
+                   target graph (edges missing + decoys present) and whose
+                   update buffer patches it back — so merged neighbor reads,
+                   not just passthrough, are what the engine consumes.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.imcore import imcore_bz
+from repro.core.semicore import decompose
+from repro.graph import BufferedGraph, CSRGraph, chung_lu, erdos_renyi
+
+ALGORITHMS = ["semicore", "semicore+", "semicore*"]
+SCHEDULES = ["seq", "batch"]
+BACKINGS = ["inmem", "memmap", "buffered"]
+
+
+# ----------------------------------------------------------- graph families
+def _star(n=41):
+    e = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n, dtype=np.int64)], 1)
+    return CSRGraph.from_edges(n, e)
+
+
+def _clique(n=13):
+    ij = np.array([(i, j) for i in range(n) for j in range(i + 1, n)], np.int64)
+    return CSRGraph.from_edges(n, ij)
+
+
+def _disconnected():
+    """Two cliques of different core number joined by nothing."""
+    a = np.array([(i, j) for i in range(6) for j in range(i + 1, 6)], np.int64)
+    b = 6 + np.array([(i, j) for i in range(4) for j in range(i + 1, 4)], np.int64)
+    return CSRGraph.from_edges(10, np.concatenate([a, b]))
+
+
+def _isolated():
+    """A path embedded in a larger id space: nodes 0, 5, 9 have no edges."""
+    e = np.array([(1, 2), (2, 3), (3, 4), (4, 6), (6, 7), (7, 8)], np.int64)
+    return CSRGraph.from_edges(10, e)
+
+
+def _empty():
+    return CSRGraph.from_edges(7, np.zeros((0, 2), np.int64))
+
+
+FAMILIES = {
+    "erdos_renyi": lambda: erdos_renyi(200, 700, seed=7),
+    "powerlaw": lambda: chung_lu(250, 900, gamma=2.3, seed=11),
+    "star": _star,
+    "clique": _clique,
+    "disconnected": _disconnected,
+    "isolated": _isolated,
+    "empty": _empty,
+}
+
+
+# ----------------------------------------------------------------- backings
+def _buffered_backing(g: CSRGraph) -> BufferedGraph:
+    """A BufferedGraph whose merged view equals ``g`` but whose base doesn't."""
+    e = g.edge_list()
+    rng = np.random.default_rng(g.n * 1000 + g.m)
+    hold_out = rng.random(len(e)) < 0.3 if len(e) else np.zeros(0, bool)
+    base_edges = e[~hold_out]
+    # decoy edges absent from g, to be deleted through the buffer
+    present = set(map(tuple, e))
+    decoys = []
+    for _ in range(200):
+        u, v = int(rng.integers(g.n)), int(rng.integers(g.n))
+        if u == v:
+            continue
+        key = (min(u, v), max(u, v))
+        if key not in present and key not in decoys:
+            decoys.append(key)
+        if len(decoys) >= 5:
+            break
+    if decoys:
+        base_edges = np.concatenate([base_edges, np.array(decoys, np.int64)])
+    bg = BufferedGraph(CSRGraph.from_edges(g.n, base_edges), buffer_capacity=1 << 30)
+    for u, v in decoys:
+        assert bg.delete_edge(int(u), int(v))
+    for u, v in e[hold_out]:
+        assert bg.insert_edge(int(u), int(v))
+    return bg
+
+
+def _with_backing(g: CSRGraph, backing: str, tmpdir: str):
+    if backing == "inmem":
+        return g
+    if backing == "memmap":
+        path = os.path.join(tmpdir, "g")
+        g.save(path)
+        return CSRGraph.load(path, mmap=True)
+    if backing == "buffered":
+        if g.n == 0:
+            return BufferedGraph(g)
+        return _buffered_backing(g)
+    raise ValueError(backing)
+
+
+# -------------------------------------------------------------------- tests
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("backing", BACKINGS)
+def test_differential_matches_bz_oracle(family, algorithm, schedule, backing, tmp_path):
+    g = FAMILIES[family]()
+    expect = imcore_bz(g)
+    target = _with_backing(g, backing, str(tmp_path))
+    r = decompose(target, algorithm, schedule, block_edges=64)
+    np.testing.assert_array_equal(
+        r.core, expect, err_msg=f"{family}/{algorithm}/{schedule}/{backing}"
+    )
+    if r.cnt is not None:  # semicore*: cnt must be exact Eq. 2 at fixpoint
+        for v in range(g.n):
+            assert r.cnt[v] == int((r.core[g.neighbors(v)] >= r.core[v]).sum())
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_differential_pooled_reader_same_fixpoint(algorithm, schedule):
+    """pool_blocks only changes I/O accounting, never the decomposition."""
+    g = chung_lu(300, 1200, seed=5)
+    expect = imcore_bz(g)
+    for pool in (1, 4, 32):
+        r = decompose(g, algorithm, schedule, block_edges=32, pool_blocks=pool)
+        np.testing.assert_array_equal(r.core, expect, err_msg=f"pool={pool}")
+
+
+# ------------------------------------------------------ property harness
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(2, 40))
+    max_e = min(n * (n - 1) // 2, 120)
+    num_e = draw(st.integers(0, max_e))
+    edges = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=num_e,
+            max_size=num_e,
+        )
+    )
+    return n, edges
+
+
+@given(random_graph(), st.sampled_from(ALGORITHMS), st.sampled_from(SCHEDULES))
+@settings(max_examples=40, deadline=None)
+def test_property_differential_all_backings(ng, algorithm, schedule):
+    n, edges = ng
+    g = CSRGraph.from_edges(n, np.array(edges, np.int64).reshape(-1, 2))
+    expect = imcore_bz(g)
+    with tempfile.TemporaryDirectory() as td:
+        for backing in BACKINGS:
+            target = _with_backing(g, backing, td)
+            r = decompose(target, algorithm, schedule, block_edges=16)
+            np.testing.assert_array_equal(
+                r.core, expect, err_msg=f"{algorithm}/{schedule}/{backing}"
+            )

@@ -1,0 +1,133 @@
+"""I/O-accounting invariants of the blocked edge table + buffer pool.
+
+Pins the external-memory cost model: sequential scans cost exactly
+``ceil(2m/B)``, the algorithm ladder reads monotonically fewer blocks, the
+paper's exact Fig. 2/4/5 traces survive ``pool_blocks=1``, and the LRU pool
+both zeroes on ``reset_io`` and never reads more as it grows (inclusion
+property of LRU).
+"""
+import numpy as np
+import pytest
+
+from repro.core.imcore import imcore_bz
+from repro.core.semicore import HostEngine, decompose
+from repro.graph import BlockReader, CSRGraph, chung_lu, erdos_renyi, paper_example_graph
+
+EXPECTED_CORES = np.array([3, 3, 3, 3, 2, 2, 2, 2, 1])
+
+
+# ------------------------------------------------------------ full scans
+@pytest.mark.parametrize("pool_blocks", [1, 2, 8])
+@pytest.mark.parametrize("block_edges", [16, 64, 4096])
+def test_sequential_full_scan_costs_ceil_2m_over_B(block_edges, pool_blocks):
+    """One cold pass over all adjacency lists reads every block exactly once
+    (compulsory misses only — no pool size can beat ceil(2m/B))."""
+    g = erdos_renyi(300, 1100, seed=2)
+    reader = BlockReader(g, block_edges, pool_blocks=pool_blocks)
+    for v in range(g.n):
+        reader.load_neighbors(v)
+    assert reader.reads == -(-g.num_directed // block_edges)
+
+
+def test_semicore_seq_per_pass_scan_cost():
+    """Every SemiCore pass is one sequential full scan (seed invariant)."""
+    g = erdos_renyi(400, 1600, seed=1)
+    r = HostEngine(g, block_edges=64).semicore("seq")
+    assert r.edge_block_reads == r.iterations * -(-g.num_directed // 64)
+
+
+# ---------------------------------------------------- algorithm ladder
+@pytest.mark.parametrize("seed", [0, 3, 9])
+def test_block_read_ladder_star_leq_plus_leq_basic(seed):
+    g = erdos_renyi(600, 2400, seed=seed)
+    basic = HostEngine(g, block_edges=64).semicore("seq")
+    plus = HostEngine(g, block_edges=64).semicore_plus("seq")
+    star = HostEngine(g, block_edges=64).semicore_star("seq")
+    expect = imcore_bz(g)
+    for r in (basic, plus, star):
+        np.testing.assert_array_equal(r.core, expect)
+    assert star.edge_block_reads <= plus.edge_block_reads <= basic.edge_block_reads
+
+
+# ------------------------------------------------- paper traces, pooled
+def test_pool_blocks_1_reproduces_paper_traces():
+    """pool_blocks=1 must leave the Fig. 2/4/5 traces bit-identical, node
+    computations and block I/O alike."""
+    for algo, comps, iters in (
+        ("semicore", 36, 4),
+        ("semicore+", 23, None),
+        ("semicore*", 11, 3),
+    ):
+        default_eng = HostEngine(paper_example_graph(), block_edges=8)
+        pooled_eng = HostEngine(paper_example_graph(), block_edges=8, pool_blocks=1)
+        runs = {}
+        for name, eng in (("default", default_eng), ("pool1", pooled_eng)):
+            r = {
+                "semicore": eng.semicore,
+                "semicore+": eng.semicore_plus,
+                "semicore*": eng.semicore_star,
+            }[algo]("seq")
+            np.testing.assert_array_equal(r.core, EXPECTED_CORES)
+            assert r.node_computations == comps
+            if iters is not None:
+                assert r.iterations == iters
+            runs[name] = r
+        assert runs["default"].edge_block_reads == runs["pool1"].edge_block_reads
+        assert runs["default"].node_table_reads == runs["pool1"].node_table_reads
+
+
+# --------------------------------------------------------------- reset_io
+def test_reset_io_zeroes_pool_state():
+    g = erdos_renyi(100, 400, seed=4)
+    reader = BlockReader(g, 32, pool_blocks=4)
+    for v in range(g.n):
+        reader.load_neighbors(v)
+    assert reader.reads > 0 and len(reader.resident_blocks) > 0
+    reader.reset_io()
+    assert reader.reads == 0
+    assert reader.node_table_reads == 0
+    assert reader.hits == 0
+    assert reader.resident_blocks == ()
+    # the pool is actually cold, not just the counters: the next access pays
+    reader.load_neighbors(0)
+    assert reader.reads >= 1
+
+
+def test_invalidate_drops_residency_but_keeps_counters():
+    g = erdos_renyi(100, 400, seed=4)
+    reader = BlockReader(g, 32, pool_blocks=4)
+    reader.load_neighbors(0)
+    before = reader.reads
+    reader.invalidate()
+    assert reader.reads == before and reader.resident_blocks == ()
+
+
+# ------------------------------------------------------- pool monotonicity
+@pytest.mark.parametrize("schedule", ["seq", "batch"])
+def test_pool_growth_monotonically_reduces_reads(schedule):
+    """On a skip-heavy SemiCore* run, block reads are non-increasing in
+    pool_blocks (LRU inclusion property), and the fixpoint is unchanged."""
+    g = chung_lu(2500, 10000, seed=6)
+    num_blocks = -(-g.num_directed // 32)
+    expect = None
+    reads = []
+    for pool in (1, 128, 256, 512, 1024):
+        r = decompose(g, "semicore*", schedule, block_edges=32, pool_blocks=pool)
+        if expect is None:
+            expect = r.core
+        else:
+            np.testing.assert_array_equal(r.core, expect)
+        reads.append(r.edge_block_reads)
+    assert all(a >= b for a, b in zip(reads, reads[1:])), reads
+    assert reads[-1] < reads[0]  # the pool must actually help
+    # pool >= every block: only compulsory misses remain
+    assert reads[-1] == num_blocks
+
+
+def test_pool_hits_accounted():
+    g = paper_example_graph()
+    reader = BlockReader(g, 4, pool_blocks=2)
+    reader.load_neighbors(0)
+    reader.load_neighbors(0)
+    assert reader.hits >= 1
+    assert reader.bytes_read == reader.reads * 4 * 4 + reader.node_table_reads * 4 * 4

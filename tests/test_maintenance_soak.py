@@ -1,0 +1,141 @@
+"""Maintenance soak: long random interleaved insert/delete sequences must
+keep ``(core, cnt)`` identical to a from-scratch SemiCore* recompute at every
+step — including across WAL-recovery replays taken mid-sequence — and the
+update buffer must honor its bounded-footprint contract (no empty-set
+entries accumulating from membership probes, see updates.py).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.maintenance import CoreMaintainer
+from repro.core.semicore import HostEngine
+from repro.graph import BufferedGraph, CSRGraph, erdos_renyi
+from repro.stream.service import CoreService
+
+
+def _scratch_state(n, edges):
+    """(core, cnt) of the current edge set via a fresh SemiCore* run."""
+    g = CSRGraph.from_edges(n, np.array(sorted(edges), np.int64).reshape(-1, 2))
+    r = HostEngine(g, block_edges=16).semicore_star("seq")
+    return r.core, r.cnt
+
+
+def _op_stream(n, edges, steps, rng):
+    """Yield ('i'|'d', u, v) ops valid against the evolving edge set."""
+    for _ in range(steps):
+        if edges and rng.random() < 0.45:
+            u, v = sorted(edges)[int(rng.integers(len(edges)))]
+            edges.discard((u, v))
+            yield "d", u, v
+        else:
+            while True:
+                u, v = int(rng.integers(n)), int(rng.integers(n))
+                if u != v and (min(u, v), max(u, v)) not in edges:
+                    break
+            u, v = min(u, v), max(u, v)
+            edges.add((u, v))
+            yield "i", u, v
+
+
+@pytest.mark.parametrize("insert_algorithm", ["semiinsert*", "semiinsert"])
+def test_soak_interleaved_updates_match_recompute(insert_algorithm):
+    n = 45
+    rng = np.random.default_rng(17)
+    g = erdos_renyi(n, 110, seed=17)
+    edges = set(map(tuple, g.edge_list()))
+    m = CoreMaintainer(g, block_edges=16)
+    for step, (op, u, v) in enumerate(_op_stream(n, edges, 60, rng)):
+        if op == "d":
+            m.delete_edge(u, v)
+        else:
+            m.insert_edge(u, v, algorithm=insert_algorithm)
+        core, cnt = _scratch_state(n, edges)
+        np.testing.assert_array_equal(m.core, core, err_msg=f"step {step} {op} ({u},{v})")
+        np.testing.assert_array_equal(m.cnt, cnt, err_msg=f"step {step} {op} ({u},{v})")
+
+
+def test_soak_with_wal_recovery_mid_sequence(tmp_path):
+    """Stream batches through a durable CoreService; at several cut points,
+    recover from snapshot + WAL tail and require the recovered state to equal
+    a from-scratch recompute of the current edge set."""
+    n = 40
+    rng = np.random.default_rng(23)
+    g = erdos_renyi(n, 90, seed=23)
+    edges = set(map(tuple, g.edge_list()))
+    base = CSRGraph.from_edges(n, np.array(sorted(edges), np.int64))
+    base_dir = os.path.join(tmp_path, "base")
+    base.save(base_dir)
+
+    wal = os.path.join(tmp_path, "wal.jsonl")
+    snap = os.path.join(tmp_path, "snaps")
+    svc = CoreService(
+        base, block_edges=16, wal_path=wal, snapshot_dir=snap, snapshot_every=3
+    )
+    checkpoints = {2, 5, 9}
+    batch = []
+    nbatches = 0
+    for op, u, v in _op_stream(n, edges, 50, rng):
+        batch.append(("+" if op == "i" else "-", u, v))
+        if len(batch) == 5:
+            svc.ingest(batch)
+            batch = []
+            nbatches += 1
+            if nbatches in checkpoints:
+                rec, stats = CoreService.recover(
+                    wal_path=wal,
+                    snapshot_dir=snap,
+                    base_graph=CSRGraph.load(base_dir),
+                    block_edges=16,
+                )
+                core, cnt = _scratch_state(n, edges)
+                np.testing.assert_array_equal(
+                    rec.maintainer.core, core, err_msg=f"recovery @batch {nbatches}"
+                )
+                np.testing.assert_array_equal(
+                    rec.maintainer.cnt, cnt, err_msg=f"recovery @batch {nbatches}"
+                )
+                assert stats.recovered_epoch == svc.epoch
+                rec.close()
+                # live service must agree too (recovery is read-only)
+                np.testing.assert_array_equal(svc.maintainer.core, core)
+    svc.close()
+
+
+# ------------------------------------------------ bounded-buffer contract
+def test_buffered_graph_rejected_updates_leave_no_empty_entries():
+    """Regression (updates.py): membership probes on a defaultdict used to
+    materialize an empty set per probed node, so rejected updates grew the
+    buffer without bound on long streams."""
+    g = erdos_renyi(200, 600, seed=1)
+    bg = BufferedGraph(g)
+    rng = np.random.default_rng(0)
+    rejected = 0
+    for _ in range(500):
+        u, v = int(rng.integers(200)), int(rng.integers(200))
+        if g.has_edge(u, v):
+            rejected += not bg.insert_edge(u, v)  # exists -> rejected
+        else:
+            rejected += not bg.delete_edge(u, v)  # missing -> rejected
+    assert rejected == 500  # every op above is a no-op by construction
+    assert bg._ins == {} and bg._del == {}
+    assert bg._size == 0
+
+
+def test_buffered_graph_cancelling_updates_clean_up_entries():
+    """insert-then-delete (and delete-then-insert) must not strand empty sets."""
+    g = erdos_renyi(50, 120, seed=3)
+    bg = BufferedGraph(g)
+    u, v = 1, 2
+    if not g.has_edge(u, v):
+        assert bg.insert_edge(u, v) and bg.delete_edge(u, v)
+    e = g.edge_list()[0]
+    assert bg.delete_edge(int(e[0]), int(e[1]))
+    assert bg.insert_edge(int(e[0]), int(e[1]))
+    assert bg._ins == {} and bg._del == {} and bg._size == 0
+    # merged reads see the unchanged graph
+    for w in range(g.n):
+        np.testing.assert_array_equal(
+            np.sort(bg.merged_neighbors(w, g.neighbors(w))), np.sort(g.neighbors(w))
+        )
