@@ -1,0 +1,108 @@
+"""Backend matrix benchmark: one superstep core, three compute substrates.
+
+Runs every batch-schedule algorithm on every compute backend (DESIGN.md §11)
+over the same graph and records pass counts, wall time, planner I/O, and the
+pallas backend's kernel-block skip counts to ``benchmarks/results/backends.json``.
+All backends must converge through identical passes to the identical core
+array — the script asserts it.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_backends.py [--quick]
+    REPRO_BACKEND=pallas PYTHONPATH=src python benchmarks/bench_backends.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.imcore import imcore_bz  # noqa: E402
+from repro.core.semicore import decompose  # noqa: E402
+from repro.graph import chung_lu  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+ALGORITHMS = ("semicore", "semicore+", "semicore*")
+BACKENDS = ("numpy", "xla", "pallas")
+
+
+def smoke() -> None:
+    """CI backend-matrix smoke: decompose under the REPRO_BACKEND env default
+    and check against the BZ oracle (scripts/ci.sh runs one per backend)."""
+    backend = os.environ.get("REPRO_BACKEND", "numpy")
+    g = chung_lu(400, 1600, seed=3)
+    expect = imcore_bz(g)
+    for algo in ALGORITHMS:
+        r = decompose(g, algo, "batch", block_edges=64)  # backend from env
+        assert np.array_equal(r.core, expect), (backend, algo)
+        assert r.backend == backend, (r.backend, backend)
+    skipped = r.kernel_blocks_skipped  # last run: semicore*
+    print(f"backend smoke OK: backend={backend} kmax={r.kmax} "
+          f"iters={r.iterations} io_blocks={r.edge_block_reads} "
+          f"kernel_blocks_skipped={skipped}")
+    if backend == "pallas":
+        assert skipped > 0, "SemiCore* frontier shrinkage must skip blocks"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small graph")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: REPRO_BACKEND env decides the backend")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+
+    n, m = (800, 3200) if args.quick else (4000, 16000)
+    block_edges = 256
+    g = chung_lu(n, m, seed=6)
+    result = {
+        "graph": {"n": g.n, "m": g.m, "block_edges": block_edges,
+                  "num_blocks": -(-g.num_directed // block_edges)},
+        "runs": [],
+    }
+    cores: dict = {}
+    for backend in BACKENDS:
+        for algo in ALGORITHMS:
+            t0 = time.perf_counter()
+            r = decompose(g, algo, "batch", block_edges=block_edges,
+                          backend=backend)
+            wall = time.perf_counter() - t0
+            cores.setdefault(algo, r.core)
+            assert np.array_equal(r.core, cores[algo]), (backend, algo)
+            row = {
+                "backend": backend,
+                "algorithm": algo,
+                "wall_seconds": round(wall, 4),
+                "iterations": r.iterations,
+                "node_computations": r.node_computations,
+                "edge_block_reads": r.edge_block_reads,
+                "node_table_reads": r.node_table_reads,
+                "kernel_blocks_active": r.kernel_blocks_active,
+                "kernel_blocks_skipped": r.kernel_blocks_skipped,
+            }
+            result["runs"].append(row)
+            print(f"{backend:>6} {algo:<10} {wall:7.3f}s  passes={r.iterations:<3} "
+                  f"io={r.edge_block_reads:<5} skipped={r.kernel_blocks_skipped}")
+    # identical passes across backends is the refactor's core invariant
+    by_algo: dict = {}
+    for row in result["runs"]:
+        by_algo.setdefault(row["algorithm"], set()).add(
+            (row["iterations"], row["edge_block_reads"]))
+    assert all(len(v) == 1 for v in by_algo.values()), by_algo
+    result["identical_passes_across_backends"] = True
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "backends.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

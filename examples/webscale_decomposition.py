@@ -1,12 +1,22 @@
-"""Web-scale-style decomposition: on-disk graph, SPMD engine, checkpoint/restart.
+"""Web-scale-style decomposition: on-disk graph, pluggable compute backend,
+SPMD engine, checkpoint/restart.
 
 The end-to-end driver for the paper's workload: builds an RMAT web-crawl-like
 graph, stores it as the on-disk node/edge tables, decomposes it with the
-distributed engine, checkpoints mid-run, and proves a warm restart converges
-to the same fixpoint (monotone upper bounds = free crash consistency).
+semi-external host engine on the chosen compute backend (DESIGN.md §11),
+cross-checks the distributed engine, checkpoints mid-run, and proves a warm
+restart converges to the same fixpoint (monotone upper bounds = free crash
+consistency).
 
-    PYTHONPATH=src python examples/webscale_decomposition.py
+    PYTHONPATH=src python examples/webscale_decomposition.py [--backend numpy|xla|pallas]
+
+``--backend pallas`` demonstrates the paper's block skipping at the kernel
+layer end to end: SemiCore*'s shrinking frontier drives the block-activity
+mask of ``segment_sum_active``, so untouched edge blocks issue no DMA (on
+this CPU container the kernels run in Pallas interpret mode, so the graph is
+scaled down to keep the demo quick; the TPU lowering is the deploy target).
 """
+import argparse
 import os
 import tempfile
 import time
@@ -18,23 +28,42 @@ from repro.core import imcore_peel, decompose
 from repro.core.distributed import distributed_decompose, shard_graph, build_decompose_fn
 from repro.train import save, restore
 
+parser = argparse.ArgumentParser()
+parser.add_argument("--backend", default="numpy",
+                    choices=["numpy", "xla", "pallas"],
+                    help="batch-schedule compute backend (DESIGN.md §11)")
+args = parser.parse_args()
+
 workdir = tempfile.mkdtemp(prefix="webscale_")
 
-# 1) build + store the graph on disk (the paper's edge/node tables)
-g = rmat(17, 12, seed=3)   # 131k nodes, ~1.4M directed edges, heavy skew
+# 1) build + store the graph on disk (the paper's edge/node tables).
+# Interpret-mode pallas pays a Python-level cost per kernel block, so the
+# pallas demo uses a smaller crawl + coarser blocks.
+if args.backend == "pallas":
+    scale, edge_factor, block_edges = 13, 8, 512
+else:
+    scale, edge_factor, block_edges = 17, 12, 4096
+g = rmat(scale, edge_factor, seed=3)
 g.save(os.path.join(workdir, "graph"))
 g = CSRGraph.load(os.path.join(workdir, "graph"), mmap=True)  # edges on disk
 print(f"graph: n={g.n:,} 2m={g.num_directed:,} (memmapped from disk)")
 
-# 2) host OOC engine (the faithful semi-external reproduction)
+# 2) host OOC engine (the faithful semi-external reproduction) on the
+#    selected compute backend
 t0 = time.time()
-r = decompose(g, "semicore*", "batch")
-print(f"SemiCore* (OOC host): kmax={r.kmax} iters={r.iterations} "
-      f"I/O={r.edge_block_reads} blocks in {time.time() - t0:.2f}s; "
-      f"node-state memory {r.memory_bytes / 1e6:.1f} MB")
+r = decompose(g, "semicore*", "batch", block_edges=block_edges,
+              backend=args.backend)
+print(f"SemiCore* (OOC host, backend={r.backend}): kmax={r.kmax} "
+      f"iters={r.iterations} I/O={r.edge_block_reads} blocks in "
+      f"{time.time() - t0:.2f}s; node-state memory {r.memory_bytes / 1e6:.1f} MB")
+if args.backend == "pallas":
+    total = r.kernel_blocks_active + r.kernel_blocks_skipped
+    print(f"  kernel layer: {r.kernel_blocks_skipped}/{total} edge-block DMAs "
+          f"skipped by the frontier activity mask (SemiCore* I/O saving)")
+expect = imcore_peel(g)
+assert np.array_equal(r.core, expect)
 
 # 3) SPMD engine + mid-run checkpoint/restart
-expect = imcore_peel(g)
 core, iters = distributed_decompose(g)
 assert np.array_equal(core, expect)
 print(f"SPMD engine: {iters} supersteps — matches IMCore")

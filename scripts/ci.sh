@@ -9,6 +9,13 @@ python -m pip install -q -r requirements-dev.txt \
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
+# backend-matrix smoke: the same batch superstep on every compute substrate
+# (engine.py, DESIGN.md §11), selected through the REPRO_BACKEND env default
+for backend in numpy xla pallas; do
+  REPRO_BACKEND=$backend PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_backends.py --smoke
+done
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
 
 # out-of-core smoke: build a ~1M-edge graph from chunks in a temp dir,

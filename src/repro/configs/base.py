@@ -119,6 +119,8 @@ class CoreGraphConfig:
     block_edges: int = 4096      # edge-table block size (storage.DEFAULT_BLOCK_EDGES)
     pool_blocks: int = 1         # BlockReader LRU pool; 1 = paper's single buffer
     build_chunk_edges: int = 1 << 22  # out-of-core build ingest chunk (build.py)
+    backend: str = "numpy"       # batch-schedule compute backend (engine.py §11):
+                                 # numpy | xla | pallas
 
     def reduced(self) -> "CoreGraphConfig":
         return replace(self, n=2000, m_directed=16_000, max_deg=64,

@@ -28,4 +28,16 @@ CLUEWEB_POOLED = CoreGraphConfig(name="semicore-clueweb-pooled",
                                  n=978_408_098, m_directed=85_148_214_938,
                                  max_deg=75_611_696, block_edges=4096,
                                  pool_blocks=256, build_chunk_edges=1 << 24)
+# Pallas-backend variant: the batch superstep running through the
+# block-skipping kernels (engine.PallasBackend, DESIGN.md §11) — SemiCore*
+# frontier shrinkage becomes skipped DMAs.  Sized to the Twitter cell, not
+# Clueweb: the pallas backend holds the edge table resident (host + HBM), so
+# its single-host envelope is bounded by memory for 2m int32 ids — and by
+# the kernel's float32-exact count range (max_deg < 2**24; bind() rejects
+# larger).  A device-sharded kernel path is what the Clueweb cell needs.
+TWITTER_PALLAS = CoreGraphConfig(name="semicore-twitter-pallas",
+                                 n=41_652_230, m_directed=2_936_730_364,
+                                 max_deg=2_997_487, block_edges=4096,
+                                 pool_blocks=1, build_chunk_edges=1 << 24,
+                                 backend="pallas")
 CONFIG = CLUEWEB

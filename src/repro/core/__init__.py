@@ -2,12 +2,23 @@
 from .imcore import imcore_bz, imcore_peel
 from .emcore import emcore, EMCoreResult
 from .localcore import local_core, h_index_batch, compute_cnt_batch
+from .engine import (
+    ComputeBackend,
+    NumpyBackend,
+    PallasBackend,
+    PassPlanner,
+    XLABackend,
+    resolve_backend,
+    run_batch,
+)
 from .semicore import HostEngine, DecompResult, decompose
 from .maintenance import CoreMaintainer, MaintStats
 
 __all__ = [
     "imcore_bz", "imcore_peel", "emcore", "EMCoreResult",
     "local_core", "h_index_batch", "compute_cnt_batch",
+    "ComputeBackend", "NumpyBackend", "XLABackend", "PallasBackend",
+    "PassPlanner", "resolve_backend", "run_batch",
     "HostEngine", "DecompResult", "decompose",
     "CoreMaintainer", "MaintStats",
 ]

@@ -23,6 +23,7 @@ intermediate ``core`` is a valid warm restart (free crash consistency).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from functools import partial
 
@@ -34,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat.jaxshims import shard_map
 
 from ..graph.storage import CSRGraph
+from .engine import edge_ge_counts, hindex_bsearch, hindex_bucketed
 
 __all__ = ["ShardedGraph", "shard_graph", "sharded_graph_specs", "distributed_decompose"]
 
@@ -120,37 +122,32 @@ def sharded_graph_specs(
 
 
 # ---------------------------------------------------------------------------
-# device-local superstep pieces (run per shard inside shard_map)
+# device-local superstep pieces (run per shard inside shard_map).  The actual
+# count / h-index math is the shared backend ops in core/engine.py — the same
+# code the host XLA backend jits — applied to the shard's local edge arrays;
+# the wrappers below only gather neighbor cores from the replicated state.
 # ---------------------------------------------------------------------------
+def _xla_segment_sum(vals, rows, num_segments):
+    return jax.ops.segment_sum(vals, rows, num_segments=num_segments)
+
+
 def _local_counts(core, dst, rows, edge_mask, thresholds, num_rows):
     """#{local edges (v,u) : core[u] >= thresholds[row(v)]} per owned row."""
-    nbr_core = jnp.take(core, dst, mode="clip")
-    vals = (nbr_core >= jnp.take(thresholds, rows, mode="clip")) & edge_mask
-    return jax.ops.segment_sum(vals.astype(jnp.int32), rows, num_segments=num_rows)
+    return edge_ge_counts(
+        jnp.take(core, dst, mode="clip"), rows, edge_mask, thresholds,
+        num_rows, segment_sum_fn=_xla_segment_sum)
 
 
 def _local_hindex(core, dst, rows, edge_mask, c_old, num_probes):
-    """Vectorized binary search for h = max k <= c_old with count_ge(k) >= k."""
-    import os
-    num_rows = c_old.shape[0]
-    lo = jnp.zeros_like(c_old)
-    hi = c_old
+    """Vectorized binary search for h = max k <= c_old with count_ge(k) >= k.
 
-    def probe(_, state):
-        lo, hi = state
-        mid = (lo + hi + 1) // 2
-        cnt = _local_counts(core, dst, rows, edge_mask, mid, num_rows)
-        ok = (cnt >= mid) & (mid > 0)
-        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
-
-    if os.environ.get("REPRO_UNROLL_SCANS") == "1":
-        state = (lo, hi)  # unrolled: cost analysis sees every probe
-        for i in range(num_probes):
-            state = probe(i, state)
-        lo, hi = state
-    else:
-        lo, hi = jax.lax.fori_loop(0, num_probes, probe, (lo, hi))
-    return lo
+    REPRO_UNROLL_SCANS=1 unrolls the probes so cost analysis sees every scan
+    (launch/dryrun.py sets it at trace time).
+    """
+    return hindex_bsearch(
+        jnp.take(core, dst, mode="clip"), rows, edge_mask, c_old, num_probes,
+        segment_sum_fn=_xla_segment_sum,
+        unroll=os.environ.get("REPRO_UNROLL_SCANS") == "1")
 
 
 def build_decompose_fn(
@@ -243,37 +240,11 @@ def build_decompose_fn(
 
 
 def _local_hindex_bucketed(core, dst, rows, edge_mask, c_old, owned_mask):
-    """Single-pass h-index: bucketed histogram + segmented suffix counts.
-
-    O(E + V) per superstep instead of log2(kmax) masked edge scans — the
-    §Perf memory-term optimization.  Buckets: node v owns positions
-    [off[v], off[v] + c_old[v]] holding counts of min(core(u), c_old(v));
-    suffix counts come from one global cumsum; h(v) = max k with s >= k.
-    """
-    V = c_old.shape[0]
-    E = dst.shape[0]
-    width = c_old + 1
-    ends = jnp.cumsum(width)
-    off = ends - width                      # exclusive offsets
-    B = E + V + 1                           # static bucket-buffer bound
-    nbr = jnp.take(core, dst, mode="clip")
-    capped = jnp.minimum(nbr, jnp.take(c_old, rows, mode="clip"))
-    idx = jnp.take(off, rows, mode="clip") + capped
-    idx = jnp.where(edge_mask, idx, B - 1)  # masked edges -> dump slot
-    hist = jnp.zeros((B,), jnp.int32).at[idx].add(1)
-    g = jnp.cumsum(hist)                    # inclusive prefix counts
-    # evaluate every bucket position: position p belongs to node v_of(p),
-    # candidate k = p - off[v]; s = g[end_v - 1] - g[p - 1]
-    pos = jnp.arange(B, dtype=jnp.int32)
-    v_of = jnp.clip(jnp.searchsorted(ends, pos, side="right"), 0, V - 1)
-    k = pos - jnp.take(off, v_of)
-    end_idx = jnp.take(ends, v_of) - 1
-    g_prev = jnp.where(pos > 0, jnp.take(g, jnp.maximum(pos - 1, 0)), 0)
-    s = jnp.take(g, end_idx) - g_prev
-    valid = (k >= 1) & (k <= jnp.take(c_old, v_of)) & (s >= k) & (
-        pos < ends[V - 1]) & jnp.take(owned_mask, v_of)
-    return jax.ops.segment_max(
-        jnp.where(valid, k, 0), v_of, num_segments=V)
+    """Single-pass h-index (O(E + V) per superstep): the shared
+    engine.hindex_bucketed op over the shard's gathered neighbor cores —
+    the §Perf memory-term optimization."""
+    return hindex_bucketed(
+        jnp.take(core, dst, mode="clip"), rows, edge_mask, c_old, owned_mask)
 
 
 def build_superstep_fn(

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
+from .engine import resolve_backend, warm_settle
 from .semicore import HostEngine
 
 __all__ = ["MaintStats", "BatchMaintStats", "CoreMaintainer"]
@@ -57,7 +58,15 @@ class BatchMaintStats:
 
 
 class CoreMaintainer:
-    """Holds (core, cnt) over a BufferedGraph; applies edge updates."""
+    """Holds (core, cnt) over a BufferedGraph; applies edge updates.
+
+    ``backend`` selects the batch-schedule compute substrate (DESIGN.md §11)
+    for the settle loops.  The default ("numpy" via ``backend=None``) keeps
+    the paper's per-edge seq maintenance (Algs. 6-8) exactly as before; any
+    other backend switches :meth:`apply_batch` to the batched settle path
+    (structural update + one warm-started SemiCore* batch settle on that
+    backend — the stream/recovery discipline).
+    """
 
     def __init__(
         self,
@@ -65,11 +74,16 @@ class CoreMaintainer:
         block_edges: int = DEFAULT_BLOCK_EDGES,
         state: tuple[np.ndarray, np.ndarray] | None = None,
         pool_blocks: int = 1,
+        backend=None,
     ):
         self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
         self.engine = HostEngine(self.bg, block_edges, pool_blocks=pool_blocks)
+        self.backend = resolve_backend(backend)
         if state is None:
-            r = self.engine.semicore_star("seq")
+            if self.backend.name == "numpy":
+                r = self.engine.semicore_star("seq", backend="numpy")
+            else:
+                r = self.engine.semicore_star("batch", backend=self.backend)
             self.core, self.cnt = r.core, r.cnt
         else:
             self.core = np.asarray(state[0], dtype=np.int64).copy()
@@ -100,7 +114,12 @@ class CoreMaintainer:
         edge, inserting a present one) are counted as no-ops rather than
         raised — the stream admission path resolves each edge's *final*
         state, so a no-op just means the stream and the graph already agree.
+
+        On a non-numpy backend the whole batch settles in one warm-started
+        SemiCore* batch run instead of per-edge seq maintenance.
         """
+        if self.backend.name != "numpy":
+            return self._apply_batch_settled(deletes, inserts)
         snap = self._io_snapshot()
         core0 = self.core.copy()
         comp = iters = nd = ni = noop = 0
@@ -135,6 +154,42 @@ class CoreMaintainer:
             num_changed=int((self.core != core0).sum()),
         )
 
+    def _apply_batch_settled(self, deletes, inserts) -> BatchMaintStats:
+        """Batched maintenance on a compute backend (DESIGN.md §11):
+        structural updates first, then one :func:`engine.warm_settle` —
+        the same warm-upper-bound + exact-cnt + SemiCore* batch discipline
+        the recovery path uses."""
+        snap = self._io_snapshot()
+        core0 = self.core.copy()
+        nd = ni = noop = 0
+        for u, v in deletes:
+            if self.bg.delete_edge(int(u), int(v)):
+                nd += 1
+            else:
+                noop += 1
+        for u, v in inserts:
+            if self.bg.insert_edge(int(u), int(v)):
+                ni += 1
+            else:
+                noop += 1
+        comp = iters = 0
+        if nd or ni:
+            r = warm_settle(self.engine, self.core, ni, self.backend)
+            self.core, self.cnt = r.core, r.cnt
+            comp, iters = r.node_computations, r.iterations
+        io = self._io_delta(snap)
+        return BatchMaintStats(
+            algorithm=f"batch-settle({self.backend.name})",
+            num_deletes=nd,
+            num_inserts=ni,
+            num_noops=noop,
+            node_computations=comp,
+            edge_block_reads=io[0],
+            node_table_reads=io[1],
+            iterations=iters,
+            num_changed=int((self.core != core0).sum()),
+        )
+
     # =====================================================================
     # Algorithm 6: SemiDelete*
     # =====================================================================
@@ -155,7 +210,7 @@ class CoreMaintainer:
             self.cnt[v] -= 1
             rng = (min(u, v), max(u, v))
         r = self.engine.semicore_star(
-            "seq", core=self.core, cnt=self.cnt, vrange=rng
+            "seq", core=self.core, cnt=self.cnt, vrange=rng, backend="numpy"
         )
         self.core, self.cnt = r.core, r.cnt
         io = self._io_delta(snap)
@@ -234,7 +289,8 @@ class CoreMaintainer:
         # --- phase 2: settle with Algorithm 5 (lines 22-25) -----------------
         act = np.flatnonzero(active)
         rng = (min(int(act.min()), u), max(int(act.max()), u))
-        r = eng.semicore_star("seq", core=core, cnt=cnt, vrange=rng)
+        r = eng.semicore_star("seq", core=core, cnt=cnt, vrange=rng,
+                              backend="numpy")
         self.core, self.cnt = r.core, r.cnt
         io = self._io_delta(snap)
         return MaintStats(

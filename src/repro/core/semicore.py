@@ -9,11 +9,16 @@ Two schedules are provided (see DESIGN.md §2, changed assumption 2):
   same pass (Gauss–Seidel), with in-pass forward triggering via UpdateRange.
   This is the faithful reproduction; the unit tests assert the paper's exact
   traces (Figs. 2/4/5: 36 / 23 / 11 node computations on the running example).
+  The seq schedule always runs on the numpy host path — it is the reference
+  every other configuration is checked against.
 * ``schedule="batch"`` — all due nodes of a pass are recomputed simultaneously
   from the pass-start state (Jacobi).  This is the vectorized host analogue of
   the SPMD/TPU engine (one superstep == one pass) and converges to the same
   fixpoint by the locality property (Thm 4.1); cnt maintenance stays *exact*
   under simultaneous updates (see the push-rule derivation in DESIGN.md).
+  The batch loop lives in :mod:`repro.core.engine` (PassPlanner + pluggable
+  ComputeBackend: numpy / xla / pallas — DESIGN.md §11); ``backend=``
+  selects the substrate, every backend reaches the identical fixpoint.
 
 Both schedules account I/O identically: one read I/O per distinct edge-table
 block touched per pass (single-buffer sequential scan, external-memory model),
@@ -21,39 +26,33 @@ plus node-table blocks for the scanned [v_min, v_max] range.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import os
 
 import numpy as np
 
 from ..graph.storage import CSRGraph, BlockReader, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
-from .localcore import local_core, h_index_batch, compute_cnt_batch
+from .engine import BACKEND_ENV_VAR, DecompResult, PassPlanner, run_batch
+from .localcore import local_core
 
 __all__ = ["DecompResult", "HostEngine", "decompose"]
 
 
-@dataclass
-class DecompResult:
-    core: np.ndarray
-    cnt: np.ndarray | None
-    iterations: int
-    node_computations: int
-    edge_block_reads: int
-    node_table_reads: int
-    algorithm: str
-    schedule: str
-    updates_per_iter: list = field(default_factory=list)
-    computations_per_iter: list = field(default_factory=list)
+def _seq_only(backend) -> None:
+    """The seq schedule is the faithful paper reference: numpy host only.
 
-    @property
-    def kmax(self) -> int:
-        return int(self.core.max()) if len(self.core) else 0
-
-    @property
-    def memory_bytes(self) -> int:
-        """O(n) node-state bytes held in memory (the paper's bound)."""
-        per_node = 8 + (8 if self.cnt is not None else 0) + 1
-        return len(self.core) * per_node
+    A non-numpy request — explicit or via the ``REPRO_BACKEND`` env default —
+    raises rather than silently running numpy, so the two spellings agree.
+    Internal reference-path callers pass ``backend="numpy"`` explicitly.
+    """
+    if backend is None:
+        backend = os.environ.get(BACKEND_ENV_VAR) or None
+    if backend is not None and str(getattr(backend, "name", backend)) != "numpy":
+        raise ValueError(
+            "schedule='seq' is the paper-faithful reference path and runs on "
+            "the numpy host backend only; use schedule='batch' for "
+            f"backend={backend!r}"
+        )
 
 
 class HostEngine:
@@ -61,6 +60,9 @@ class HostEngine:
 
     ``pool_blocks`` sizes the :class:`BlockReader` LRU buffer pool; the
     default of 1 is the paper's single-buffer model (DESIGN.md §10).
+    Batch-schedule compute is delegated to :mod:`repro.core.engine`; pass
+    ``backend=`` ("numpy" | "xla" | "pallas", or a ComputeBackend instance)
+    to pick the substrate.
     """
 
     def __init__(
@@ -77,6 +79,7 @@ class HostEngine:
             base = graph
         self.graph = base
         self.reader = BlockReader(base, block_edges, pool_blocks=pool_blocks)
+        self.planner = PassPlanner(self)
 
     # ------------------------------------------------------------------ reads
     def _sync(self) -> None:
@@ -105,9 +108,10 @@ class HostEngine:
     # =====================================================================
     # Algorithm 3: SemiCore
     # =====================================================================
-    def semicore(self, schedule: str = "seq") -> DecompResult:
+    def semicore(self, schedule: str = "seq", backend=None) -> DecompResult:
         if schedule == "batch":
-            return self._semicore_batch()
+            return run_batch(self, "semicore", backend)
+        _seq_only(backend)
         n = self.n
         core = self.degrees().astype(np.int64)
         comp = 0
@@ -132,33 +136,13 @@ class HostEngine:
             comp_hist.append(n)
         return self._result(core, None, iters, comp, "semicore", "seq", upd_hist, comp_hist)
 
-    def _semicore_batch(self) -> DecompResult:
-        n = self.n
-        g = self.graph
-        core = self.degrees().astype(np.int64)
-        all_nodes = np.arange(n, dtype=np.int64)
-        comp, iters = 0, 0
-        upd_hist, comp_hist = [], []
-        while True:
-            iters += 1
-            vals, seg_ptr, nbr_flat = self._gather(all_nodes, core)
-            self.reader.account_node_table_scan(0, n - 1)
-            h = np.minimum(h_index_batch(vals, seg_ptr), core)
-            changed = int((h != core).sum())
-            upd_hist.append(changed)
-            comp_hist.append(n)
-            comp += n
-            core = h
-            if changed == 0:
-                break
-        return self._result(core, None, iters, comp, "semicore", "batch", upd_hist, comp_hist)
-
     # =====================================================================
     # Algorithm 4: SemiCore+
     # =====================================================================
-    def semicore_plus(self, schedule: str = "seq") -> DecompResult:
+    def semicore_plus(self, schedule: str = "seq", backend=None) -> DecompResult:
         if schedule == "batch":
-            return self._semicore_plus_batch()
+            return run_batch(self, "semicore+", backend)
+        _seq_only(backend)
         n = self.n
         core = self.degrees().astype(np.int64)
         active = np.ones(n, dtype=bool)
@@ -201,29 +185,6 @@ class HostEngine:
             comp += cpt
         return self._result(core, None, iters, comp, "semicore+", "seq", upd_hist, comp_hist)
 
-    def _semicore_plus_batch(self) -> DecompResult:
-        n = self.n
-        core = self.degrees().astype(np.int64)
-        frontier = np.arange(n, dtype=np.int64)
-        comp, iters = 0, 0
-        upd_hist, comp_hist = [], []
-        while len(frontier):
-            iters += 1
-            vals, seg_ptr, nbr_flat = self._gather(frontier, core)
-            self.reader.account_node_table_scan(int(frontier[0]), int(frontier[-1]))
-            h = np.minimum(h_index_batch(vals, seg_ptr), core[frontier])
-            changed_mask = h != core[frontier]
-            comp += len(frontier)
-            comp_hist.append(len(frontier))
-            upd_hist.append(int(changed_mask.sum()))
-            core[frontier] = h
-            # Lemma 4.1: only neighbors of changed nodes can change next pass
-            lens = np.diff(seg_ptr)
-            seg_changed = np.repeat(changed_mask, lens)
-            frontier = np.unique(nbr_flat[seg_changed].astype(np.int64))
-            frontier = frontier[core[frontier] > 0]
-        return self._result(core, None, iters, comp, "semicore+", "batch", upd_hist, comp_hist)
-
     # =====================================================================
     # Algorithm 5: SemiCore*
     # =====================================================================
@@ -234,12 +195,14 @@ class HostEngine:
         core: np.ndarray | None = None,
         cnt: np.ndarray | None = None,
         vrange: tuple[int, int] | None = None,
+        backend=None,
         _count_first_pass_all: bool = True,
     ) -> DecompResult:
         """Full Algorithm 5; with (core, cnt, vrange) given, runs its lines
         4-14 as a warm-started settle loop (used by SemiDelete*/SemiInsert)."""
         if schedule == "batch":
-            return self._semicore_star_batch(core=core, cnt=cnt)
+            return run_batch(self, "semicore*", backend, core=core, cnt=cnt)
+        _seq_only(backend)
         n = self.n
         warm = core is not None
         if not warm:
@@ -295,117 +258,7 @@ class HostEngine:
             comp += cpt
         return self._result(core, cnt, iters, comp, "semicore*", "seq", upd_hist, comp_hist)
 
-    def _semicore_star_batch(
-        self, *, core: np.ndarray | None = None, cnt: np.ndarray | None = None
-    ) -> DecompResult:
-        n = self.n
-        warm = core is not None
-        if not warm:
-            core = self.degrees().astype(np.int64)
-            cnt = np.zeros(n, dtype=np.int64)
-        else:
-            core = np.asarray(core, dtype=np.int64).copy()
-            cnt = np.asarray(cnt, dtype=np.int64).copy()
-        comp, iters = 0, 0
-        upd_hist, comp_hist = [], []
-        frontier = np.flatnonzero((cnt < core) & (core > 0))
-        while len(frontier):
-            iters += 1
-            vals_old, seg_ptr, nbr_flat = self._gather(frontier, core)
-            self.reader.account_node_table_scan(int(frontier[0]), int(frontier[-1]))
-            c_old_f = core[frontier].copy()
-            h = np.minimum(h_index_batch(vals_old, seg_ptr), c_old_f)
-            comp += len(frontier)
-            comp_hist.append(len(frontier))
-            upd_hist.append(int((h != c_old_f).sum()))
-            core[frontier] = h
-            # exact cnt under simultaneous updates (DESIGN.md §2):
-            # (1) recompute cnt of frontier against pass-start neighbor values
-            cnt[frontier] = compute_cnt_batch(vals_old, seg_ptr, h)
-            # (2) push decrements: edge (v in F -> u) with
-            #     core_now(u) in (h(v), c_old(v)]
-            lens = np.diff(seg_ptr)
-            h_rep = np.repeat(h, lens)
-            c_old_rep = np.repeat(c_old_f, lens)
-            core_now_u = core[nbr_flat]
-            mask = (core_now_u > h_rep) & (core_now_u <= c_old_rep)
-            if mask.any():
-                dec = np.bincount(nbr_flat[mask].astype(np.int64), minlength=n)
-                cnt -= dec
-            frontier = np.flatnonzero((cnt < core) & (core > 0))
-        return self._result(core, cnt, iters, comp, "semicore*", "batch", upd_hist, comp_hist)
-
     # ------------------------------------------------------------------ utils
-    def _gather(self, nodes: np.ndarray, core: np.ndarray):
-        """Flattened adjacency of ``nodes`` + exact block-I/O accounting.
-
-        Returns (neighbor core values, segment offsets, flat neighbor ids).
-        """
-        self._sync()
-        g = self.graph
-        lo = g.indptr[nodes]
-        hi = g.indptr[nodes + 1]
-        lens = (hi - lo).astype(np.int64)
-        total = int(lens.sum())
-        seg_ptr = np.zeros(len(nodes) + 1, dtype=np.int64)
-        np.cumsum(lens, out=seg_ptr[1:])
-        if total:
-            flat = np.repeat(lo - seg_ptr[:-1], lens) + np.arange(total, dtype=np.int64)
-            nbr_flat = np.asarray(g.adj)[flat]
-        else:
-            nbr_flat = np.empty(0, dtype=np.int32)
-        # block I/O: union of [lo//B, hi-1//B] intervals, streamed through the
-        # reader's buffer pool in ascending order (single buffer when
-        # pool_blocks == 1, LRU page cache otherwise)
-        B = self.reader.block_edges
-        nz = lens > 0
-        if nz.any():
-            first = (lo[nz] // B).astype(np.int64)
-            last = ((hi[nz] - 1) // B).astype(np.int64)
-            nb = self.reader.num_blocks
-            diff = np.zeros(nb + 1, dtype=np.int64)
-            np.add.at(diff, first, 1)
-            np.add.at(diff, last + 1, -1)
-            covered = np.cumsum(diff[:-1]) > 0
-            self.reader.charge_pass(np.flatnonzero(covered))
-        # merge buffered edge deltas (in-memory, no extra block I/O): locate
-        # the dirty nodes vectorized and splice only their segments, so a
-        # handful of buffered updates costs O(|dirty|) Python work plus the
-        # unavoidable flat-array copy — never a loop over the whole frontier
-        if self.buffered is not None and self.buffered._size:
-            dirty = np.fromiter(
-                self.buffered._ins.keys() | self.buffered._del.keys(),
-                dtype=np.int64,
-            )
-            hit = np.flatnonzero(np.isin(nodes, dirty))
-            if len(hit):
-                merged = [
-                    np.asarray(
-                        self.buffered.merged_neighbors(
-                            int(nodes[i]), nbr_flat[seg_ptr[i] : seg_ptr[i + 1]]
-                        ),
-                        dtype=np.int32,
-                    )
-                    for i in hit
-                ]
-                new_lens = np.diff(seg_ptr)
-                new_lens[hit] = [len(s) for s in merged]
-                new_ptr = np.zeros(len(nodes) + 1, dtype=np.int64)
-                np.cumsum(new_lens, out=new_ptr[1:])
-                out = np.empty(int(new_ptr[-1]), dtype=np.int32)
-                prev_old = 0
-                prev_new = 0
-                for seg, i in zip(merged, hit):
-                    span = int(seg_ptr[i]) - prev_old  # untouched run before i
-                    out[prev_new : prev_new + span] = nbr_flat[prev_old : prev_old + span]
-                    prev_new += span
-                    out[prev_new : prev_new + len(seg)] = seg
-                    prev_new += len(seg)
-                    prev_old = int(seg_ptr[i + 1])
-                out[prev_new:] = nbr_flat[prev_old:]
-                nbr_flat, seg_ptr = out, new_ptr
-        return core[nbr_flat], seg_ptr, nbr_flat
-
     def _result(self, core, cnt, iters, comp, algo, schedule, upd, cpt) -> DecompResult:
         return DecompResult(
             core=core,
@@ -418,6 +271,7 @@ class HostEngine:
             schedule=schedule,
             updates_per_iter=upd,
             computations_per_iter=cpt,
+            backend="numpy",
         )
 
 
@@ -427,13 +281,20 @@ def decompose(
     schedule: str = "batch",
     block_edges: int = DEFAULT_BLOCK_EDGES,
     pool_blocks: int = 1,
+    backend=None,
 ) -> DecompResult:
-    """One-call core decomposition with the chosen paper algorithm."""
+    """One-call core decomposition with the chosen paper algorithm.
+
+    ``backend`` picks the batch-schedule compute substrate ("numpy" | "xla" |
+    "pallas" | a ComputeBackend instance); ``None`` defers to the
+    ``REPRO_BACKEND`` environment variable (default numpy).  The seq schedule
+    is the paper-faithful numpy reference path.
+    """
     eng = HostEngine(graph, block_edges, pool_blocks=pool_blocks)
     if algorithm == "semicore":
-        return eng.semicore(schedule)
+        return eng.semicore(schedule, backend=backend)
     if algorithm == "semicore+":
-        return eng.semicore_plus(schedule)
+        return eng.semicore_plus(schedule, backend=backend)
     if algorithm == "semicore*":
-        return eng.semicore_star(schedule)
+        return eng.semicore_star(schedule, backend=backend)
     raise ValueError(f"unknown algorithm {algorithm!r}")

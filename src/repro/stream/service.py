@@ -29,9 +29,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.engine import warm_settle
 from ..core.maintenance import CoreMaintainer
 from ..core.semicore import HostEngine
-from ..core.localcore import compute_cnt_batch
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from .admission import AdmittedBatch, admit_batch
@@ -163,7 +163,13 @@ class _LRUCache:
 
 # =================================================================== service
 class CoreService:
-    """Owns the semi-external node state and serves it under a live stream."""
+    """Owns the semi-external node state and serves it under a live stream.
+
+    ``backend`` selects the batch-settle compute substrate ("numpy" | "xla" |
+    "pallas", DESIGN.md §11); the numpy default keeps the paper's per-edge
+    seq maintenance, any other backend ingests each batch through one
+    warm-started SemiCore* batch settle on that backend.
+    """
 
     def __init__(
         self,
@@ -179,9 +185,11 @@ class CoreService:
         cache_size: int = 256,
         state: tuple[np.ndarray, np.ndarray] | None = None,
         epoch: int = 0,
+        backend=None,
     ):
         self.maintainer = CoreMaintainer(
-            graph, block_edges, state=state, pool_blocks=pool_blocks
+            graph, block_edges, state=state, pool_blocks=pool_blocks,
+            backend=backend,
         )
         self.bg: BufferedGraph = self.maintainer.bg
         self.insert_algorithm = insert_algorithm
@@ -303,6 +311,7 @@ class CoreService:
         reader = self.maintainer.engine.reader
         return {
             "epoch": self.epoch,
+            "backend": self.maintainer.backend.name,
             "n": self.bg.n,
             "m": self.bg.m,
             "degeneracy": self.degeneracy(),
@@ -371,12 +380,8 @@ class CoreService:
                 warm_restart = True
                 bg.flush()  # one CSR rewrite so the settle scans exact lists
                 eng = HostEngine(bg, block_edges, pool_blocks=pool_blocks)
-                warm = np.minimum(
-                    np.asarray(core0, dtype=np.int64) + applied_i, bg.degrees()
-                )
-                vals, seg_ptr, _ = eng._gather(np.arange(bg.n, dtype=np.int64), warm)
-                cnt = compute_cnt_batch(vals, seg_ptr, warm)
-                settle = eng.semicore_star("batch", core=warm, cnt=cnt)
+                settle = warm_settle(eng, core0, applied_i,
+                                     service_kwargs.get("backend"))
                 state = (settle.core, settle.cnt)
             else:
                 state = (core0, cnt0)

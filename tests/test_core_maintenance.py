@@ -141,3 +141,33 @@ def test_maintenance_cheaper_than_recompute():
         total_io += s.edge_block_reads
     # per-op maintenance I/O is far below one full decomposition (Fig. 10)
     assert total_io / 40 < full.edge_block_reads / 5
+
+
+# ----------------------------------------------------- batched backend settle
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_apply_batch_settled_backend_matches_recompute(backend):
+    """Non-numpy backends ingest a micro-batch through one warm-started
+    SemiCore* batch settle; (core, cnt) must equal recompute-from-scratch
+    after every batch (DESIGN.md §11)."""
+    g = chung_lu(250, 1000, seed=13)
+    e = g.edge_list()
+    rng = np.random.default_rng(3)
+    dels = [tuple(map(int, e[i])) for i in rng.choice(len(e), 12, replace=False)]
+    present = set(map(tuple, e))
+    ins = []
+    while len(ins) < 8:
+        u, v = sorted(map(int, rng.integers(0, g.n, 2)))
+        if u != v and (u, v) not in present:
+            ins.append((u, v))
+            present.add((u, v))
+    m = CoreMaintainer(g, block_edges=64, backend=backend)
+    ref = CoreMaintainer(g, block_edges=64)  # numpy per-edge reference
+    for batch_d, batch_i in ((dels[:6], ins[:4]), (dels[6:], ins[4:])):
+        s = m.apply_batch(batch_d, batch_i)
+        ref.apply_batch(batch_d, batch_i)
+        assert s.algorithm == f"batch-settle({backend})"
+        assert s.num_deletes == 6 and s.num_inserts == 4
+        final = m.bg.materialize()
+        np.testing.assert_array_equal(m.core, imcore_bz(final))
+        np.testing.assert_array_equal(m.core, ref.core)
+        np.testing.assert_array_equal(m.cnt, ref.cnt)

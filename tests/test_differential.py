@@ -1,5 +1,6 @@
-"""Differential battery: every algorithm × schedule × storage backing must
-agree with the in-memory BZ oracle (Algorithm 1) on seeded graph families.
+"""Differential battery: every algorithm × schedule × storage backing × compute
+backend must agree with the in-memory BZ oracle (Algorithm 1) on seeded graph
+families.
 
 Backings:
   * ``inmem``    — numpy arrays straight from the generator;
@@ -9,6 +10,11 @@ Backings:
                    target graph (edges missing + decoys present) and whose
                    update buffer patches it back — so merged neighbor reads,
                    not just passthrough, are what the engine consumes.
+
+Backends (batch schedule; DESIGN.md §11): ``numpy`` — the historical host
+loops, whose traces must stay bit-identical; ``xla`` — jit'd binary-search
+h-index shared with the SPMD engine; ``pallas-interpret`` — block-skipping
+kernels through the Pallas interpreter.
 """
 import os
 import tempfile
@@ -19,11 +25,18 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.imcore import imcore_bz
 from repro.core.semicore import decompose
-from repro.graph import BufferedGraph, CSRGraph, chung_lu, erdos_renyi
+from repro.graph import (
+    BufferedGraph,
+    CSRGraph,
+    chung_lu,
+    erdos_renyi,
+    paper_example_graph,
+)
 
 ALGORITHMS = ["semicore", "semicore+", "semicore*"]
 SCHEDULES = ["seq", "batch"]
 BACKINGS = ["inmem", "memmap", "buffered"]
+BACKENDS = ["numpy", "xla", "pallas-interpret"]
 
 
 # ----------------------------------------------------------- graph families
@@ -135,6 +148,75 @@ def test_differential_pooled_reader_same_fixpoint(algorithm, schedule):
     for pool in (1, 4, 32):
         r = decompose(g, algorithm, schedule, block_edges=32, pool_blocks=pool)
         np.testing.assert_array_equal(r.core, expect, err_msg=f"pool={pool}")
+
+
+# -------------------------------------------------------- compute backends
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_differential_matches_bz_oracle(family, algorithm, backend):
+    """backend × algorithm × batch schedule vs the BZ oracle, plus exact
+    pass-for-pass agreement (core, cnt, I/O trace) with the numpy backend."""
+    g = FAMILIES[family]()
+    expect = imcore_bz(g)
+    ref = decompose(g, algorithm, "batch", block_edges=64, backend="numpy")
+    r = decompose(g, algorithm, "batch", block_edges=64, backend=backend)
+    np.testing.assert_array_equal(
+        r.core, expect, err_msg=f"{family}/{algorithm}/{backend}"
+    )
+    if r.cnt is not None:  # semicore*: cnt must be exact Eq. 2 at fixpoint
+        np.testing.assert_array_equal(r.cnt, ref.cnt)
+    # exact integer ops => identical passes => identical planner accounting
+    assert r.iterations == ref.iterations
+    assert r.node_computations == ref.node_computations
+    assert r.edge_block_reads == ref.edge_block_reads
+    assert r.node_table_reads == ref.node_table_reads
+    assert r.backend == backend.split("-")[0]
+
+
+def test_numpy_backend_preserves_paper_traces():
+    """pool=1 Fig. 2/4/5 traces are unchanged under the numpy backend: the
+    exact node computations, iterations, and block I/O of the paper's
+    running example, seq and batch schedules alike."""
+    # (algorithm, schedule) -> (comps, iters, edge_block_reads, node_reads)
+    pinned = {
+        ("semicore", "seq"): (36, 4, 1, 4),
+        ("semicore+", "seq"): (23, 4, 1, 4),
+        ("semicore*", "seq"): (11, 3, 1, 3),
+        ("semicore", "batch"): (36, 4, 4, 4),
+        ("semicore+", "batch"): (26, 4, 4, 4),
+        ("semicore*", "batch"): (11, 3, 3, 3),
+    }
+    for (algo, sched), (comps, iters, ebr, ntr) in pinned.items():
+        r = decompose(paper_example_graph(), algo, sched, block_edges=64,
+                      pool_blocks=1, backend="numpy")
+        np.testing.assert_array_equal(r.core, [3, 3, 3, 3, 2, 2, 2, 2, 1])
+        assert r.node_computations == comps, (algo, sched)
+        assert r.iterations == iters, (algo, sched)
+        assert r.edge_block_reads == ebr, (algo, sched)
+        assert r.node_table_reads == ntr, (algo, sched)
+
+
+def test_pallas_backend_skips_blocks_on_shrinking_frontier():
+    """SemiCore* frontier shrinkage must reach the kernel layer: inactive
+    edge blocks are skipped (no DMA), and the skip count is reported."""
+    g = chung_lu(250, 900, gamma=2.3, seed=11)
+    star = decompose(g, "semicore*", "batch", block_edges=64, backend="pallas")
+    assert star.kernel_blocks_skipped > 0
+    # per-pass blocks partition into active + skipped
+    nb = -(-g.num_directed // 64)
+    assert star.kernel_blocks_active + star.kernel_blocks_skipped == \
+        nb * star.iterations
+    # full-frontier SemiCore never skips: every pass touches every block
+    basic = decompose(g, "semicore", "batch", block_edges=64, backend="pallas")
+    assert basic.kernel_blocks_skipped == 0
+    assert basic.kernel_blocks_active == nb * basic.iterations
+
+
+def test_seq_schedule_rejects_non_numpy_backends():
+    g = paper_example_graph()
+    with pytest.raises(ValueError, match="seq"):
+        decompose(g, "semicore*", "seq", backend="xla")
 
 
 # ------------------------------------------------------ property harness
