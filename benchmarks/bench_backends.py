@@ -1,10 +1,15 @@
 """Backend matrix benchmark: one superstep core, three compute substrates.
 
 Runs every batch-schedule algorithm on every compute backend (DESIGN.md §11)
-over the same graph and records pass counts, wall time, planner I/O, and the
-pallas backend's kernel-block skip counts to ``benchmarks/results/backends.json``.
-All backends must converge through identical passes to the identical core
-array — the script asserts it.
+over the same graphs and records pass counts, wall time (cold = first call
+including jit compiles, warm = steady state on the device-resident caches),
+jit trace counts, planner I/O, and the pallas backend's kernel-block skip
+counts to ``benchmarks/results/backends.json``.  All backends must converge
+through identical passes to the identical core array — the script asserts it.
+
+Two graphs: the PR 3 comparison cell (n=4k, the history in CHANGES.md) and a
+``large`` ≥200k-directed-edge cell (numpy vs xla) where the device-resident
+speedup-vs-numpy is the headline number.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_backends.py [--quick]
@@ -22,6 +27,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core import resident  # noqa: E402
 from repro.core.imcore import imcore_bz  # noqa: E402
 from repro.core.semicore import decompose  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
@@ -30,28 +36,108 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 ALGORITHMS = ("semicore", "semicore+", "semicore*")
 BACKENDS = ("numpy", "xla", "pallas")
 
+# smoke gate: the device-resident xla loop must stay within a loose constant
+# factor of numpy wall-clock (compile excluded via one warmup run); the
+# additive floor absorbs CI scheduling noise on a tiny graph
+SMOKE_WALL_FACTOR = 40.0
+SMOKE_WALL_FLOOR_S = 2.0
+
+
+def _timed(g, algo, backend, block_edges):
+    """(cold_seconds, warm_seconds, jit_traces, result) for one config."""
+    t0 = resident.trace_count()
+    w0 = time.perf_counter()
+    r = decompose(g, algo, "batch", block_edges=block_edges, backend=backend)
+    cold = time.perf_counter() - w0
+    traces = resident.trace_count() - t0
+    w1 = time.perf_counter()
+    r2 = decompose(g, algo, "batch", block_edges=block_edges, backend=backend)
+    warm = time.perf_counter() - w1
+    assert np.array_equal(r.core, r2.core)
+    return cold, warm, traces, r
+
 
 def smoke() -> None:
-    """CI backend-matrix smoke: decompose under the REPRO_BACKEND env default
-    and check against the BZ oracle (scripts/ci.sh runs one per backend)."""
+    """CI backend-matrix smoke: decompose under the REPRO_BACKEND env default,
+    check against the BZ oracle, and gate the device-resident wall-clock
+    (scripts/ci.sh runs one per backend)."""
     backend = os.environ.get("REPRO_BACKEND", "numpy")
     g = chung_lu(400, 1600, seed=3)
     expect = imcore_bz(g)
+    numpy_wall = 0.0
+    wall = 0.0
     for algo in ALGORITHMS:
+        t0 = time.perf_counter()
+        rn = decompose(g, algo, "batch", block_edges=64, backend="numpy")
+        numpy_wall += time.perf_counter() - t0
+        assert np.array_equal(rn.core, expect), ("numpy", algo)
         r = decompose(g, algo, "batch", block_edges=64)  # backend from env
+        t0 = time.perf_counter()
+        r = decompose(g, algo, "batch", block_edges=64)  # warm: jits cached
+        wall += time.perf_counter() - t0
         assert np.array_equal(r.core, expect), (backend, algo)
         assert r.backend == backend, (r.backend, backend)
     skipped = r.kernel_blocks_skipped  # last run: semicore*
     print(f"backend smoke OK: backend={backend} kmax={r.kmax} "
           f"iters={r.iterations} io_blocks={r.edge_block_reads} "
-          f"kernel_blocks_skipped={skipped}")
+          f"kernel_blocks_skipped={skipped} wall={wall:.3f}s "
+          f"(numpy {numpy_wall:.3f}s)")
     if backend == "pallas":
         assert skipped > 0, "SemiCore* frontier shrinkage must skip blocks"
+    if backend == "xla" and resident.resident_enabled():
+        # the device-resident sanity gate: within a loose multiple of numpy.
+        # Not applied to the REPRO_DEVICE_RESIDENT=0 legacy leg, whose
+        # per-pass loop is exactness-checked but expected to be slow.
+        limit = SMOKE_WALL_FACTOR * numpy_wall + SMOKE_WALL_FLOOR_S
+        assert wall <= limit, (
+            f"xla wall {wall:.3f}s exceeds {limit:.3f}s "
+            f"({SMOKE_WALL_FACTOR}x numpy + {SMOKE_WALL_FLOOR_S}s)")
+
+
+def _bench_graph(g, block_edges, backends, label):
+    rows = []
+    cores: dict = {}
+    warm_numpy: dict = {}
+    for backend in backends:
+        for algo in ALGORITHMS:
+            cold, warm, traces, r = _timed(g, algo, backend, block_edges)
+            cores.setdefault(algo, r.core)
+            assert np.array_equal(r.core, cores[algo]), (backend, algo)
+            if backend == "numpy":
+                warm_numpy[algo] = warm
+            row = {
+                "backend": backend,
+                "algorithm": algo,
+                "wall_seconds": round(warm, 4),
+                "wall_seconds_cold": round(cold, 4),
+                "jit_traces": traces,
+                "speedup_vs_numpy": round(warm_numpy[algo] / warm, 2),
+                "iterations": r.iterations,
+                "node_computations": r.node_computations,
+                "edge_block_reads": r.edge_block_reads,
+                "node_table_reads": r.node_table_reads,
+                "kernel_blocks_active": r.kernel_blocks_active,
+                "kernel_blocks_skipped": r.kernel_blocks_skipped,
+            }
+            rows.append(row)
+            print(f"[{label}] {backend:>6} {algo:<10} warm={warm:7.3f}s "
+                  f"cold={cold:7.3f}s traces={traces} "
+                  f"passes={r.iterations:<3} io={r.edge_block_reads:<5} "
+                  f"skipped={r.kernel_blocks_skipped}")
+    # identical passes across backends is the layer's core invariant
+    by_algo: dict = {}
+    for row in rows:
+        by_algo.setdefault(row["algorithm"], set()).add(
+            (row["iterations"], row["edge_block_reads"],
+             row["node_table_reads"]))
+    assert all(len(v) == 1 for v in by_algo.values()), by_algo
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true", help="small graph")
+    ap.add_argument("--quick", action="store_true",
+                    help="small graphs, skip the large cell")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: REPRO_BACKEND env decides the backend")
     args = ap.parse_args()
@@ -65,38 +151,20 @@ def main() -> None:
     result = {
         "graph": {"n": g.n, "m": g.m, "block_edges": block_edges,
                   "num_blocks": -(-g.num_directed // block_edges)},
-        "runs": [],
+        "runs": _bench_graph(g, block_edges, BACKENDS, "small"),
+        "identical_passes_across_backends": True,
     }
-    cores: dict = {}
-    for backend in BACKENDS:
-        for algo in ALGORITHMS:
-            t0 = time.perf_counter()
-            r = decompose(g, algo, "batch", block_edges=block_edges,
-                          backend=backend)
-            wall = time.perf_counter() - t0
-            cores.setdefault(algo, r.core)
-            assert np.array_equal(r.core, cores[algo]), (backend, algo)
-            row = {
-                "backend": backend,
-                "algorithm": algo,
-                "wall_seconds": round(wall, 4),
-                "iterations": r.iterations,
-                "node_computations": r.node_computations,
-                "edge_block_reads": r.edge_block_reads,
-                "node_table_reads": r.node_table_reads,
-                "kernel_blocks_active": r.kernel_blocks_active,
-                "kernel_blocks_skipped": r.kernel_blocks_skipped,
-            }
-            result["runs"].append(row)
-            print(f"{backend:>6} {algo:<10} {wall:7.3f}s  passes={r.iterations:<3} "
-                  f"io={r.edge_block_reads:<5} skipped={r.kernel_blocks_skipped}")
-    # identical passes across backends is the refactor's core invariant
-    by_algo: dict = {}
-    for row in result["runs"]:
-        by_algo.setdefault(row["algorithm"], set()).add(
-            (row["iterations"], row["edge_block_reads"]))
-    assert all(len(v) == 1 for v in by_algo.values()), by_algo
-    result["identical_passes_across_backends"] = True
+    if not args.quick:
+        # >= 200k directed edges: the interpret-mode pallas kernels pay a
+        # Python-free but still emulated per-block cost, so the large cell
+        # compares the host reference against the device-resident xla loop
+        gl = chung_lu(25_000, 110_000, seed=8)
+        assert gl.num_directed >= 200_000
+        result["large"] = {
+            "graph": {"n": gl.n, "m": gl.m, "block_edges": 4096,
+                      "num_blocks": -(-gl.num_directed // 4096)},
+            "runs": _bench_graph(gl, 4096, ("numpy", "xla"), "large"),
+        }
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "backends.json")
     with open(path, "w") as f:

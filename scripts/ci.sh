@@ -10,11 +10,19 @@ python -m pip install -q -r requirements-dev.txt \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 # backend-matrix smoke: the same batch superstep on every compute substrate
-# (engine.py, DESIGN.md §11), selected through the REPRO_BACKEND env default
+# (engine.py, DESIGN.md §11), selected through the REPRO_BACKEND env default.
+# The xla leg also gates device-resident wall-clock against numpy (a loose
+# multiple; see bench_backends.smoke) so a host-loop regression fails CI.
 for backend in numpy xla pallas; do
   REPRO_BACKEND=$backend PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_backends.py --smoke
 done
+
+# legacy per-pass loop (REPRO_DEVICE_RESIDENT=0, DESIGN.md §12) must stay
+# exact: same fixpoint, same planner trace as the resident default
+REPRO_DEVICE_RESIDENT=0 REPRO_BACKEND=xla \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_backends.py --smoke
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
 

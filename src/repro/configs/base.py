@@ -121,6 +121,14 @@ class CoreGraphConfig:
     build_chunk_edges: int = 1 << 22  # out-of-core build ingest chunk (build.py)
     backend: str = "numpy"       # batch-schedule compute backend (engine.py §11):
                                  # numpy | xla | pallas
+    superstep_chunk: int = 8     # device-resident passes per host round-trip
+                                 # (resident.py §12) — threaded through
+                                 # decompose / CoreMaintainer / CoreService
+                                 # (superstep_chunk=cfg.superstep_chunk);
+                                 # REPRO_RESIDENT_CHUNK overrides the default.
+                                 # Per-chunk frontier record is chunk × n bools
+                                 # pulled back once per round-trip — size it so
+                                 # that stays small next to the O(n) node state.
 
     def reduced(self) -> "CoreGraphConfig":
         return replace(self, n=2000, m_directed=16_000, max_deg=64,

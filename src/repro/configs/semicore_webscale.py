@@ -35,9 +35,13 @@ CLUEWEB_POOLED = CoreGraphConfig(name="semicore-clueweb-pooled",
 # its single-host envelope is bounded by memory for 2m int32 ids — and by
 # the kernel's float32-exact count range (max_deg < 2**24; bind() rejects
 # larger).  A device-sharded kernel path is what the Clueweb cell needs.
+# The fixpoint runs device-resident (DESIGN.md §12): superstep_chunk=4
+# bounds the per-round-trip frontier record at 4 × n ≈ 167 MB of bools —
+# the O(n)-state budget dominates it, and at ~20 passes the loop still
+# needs only ~5 round-trips.
 TWITTER_PALLAS = CoreGraphConfig(name="semicore-twitter-pallas",
                                  n=41_652_230, m_directed=2_936_730_364,
                                  max_deg=2_997_487, block_edges=4096,
                                  pool_blocks=1, build_chunk_edges=1 << 24,
-                                 backend="pallas")
+                                 backend="pallas", superstep_chunk=4)
 CONFIG = CLUEWEB

@@ -4,6 +4,7 @@ from .emcore import emcore, EMCoreResult
 from .localcore import local_core, h_index_batch, compute_cnt_batch
 from .engine import (
     ComputeBackend,
+    DeviceBackend,
     NumpyBackend,
     PallasBackend,
     PassPlanner,
@@ -11,14 +12,17 @@ from .engine import (
     resolve_backend,
     run_batch,
 )
+from . import resident
+from .resident import run_resident, trace_count
 from .semicore import HostEngine, DecompResult, decompose
 from .maintenance import CoreMaintainer, MaintStats
 
 __all__ = [
     "imcore_bz", "imcore_peel", "emcore", "EMCoreResult",
     "local_core", "h_index_batch", "compute_cnt_batch",
-    "ComputeBackend", "NumpyBackend", "XLABackend", "PallasBackend",
-    "PassPlanner", "resolve_backend", "run_batch",
+    "ComputeBackend", "DeviceBackend", "NumpyBackend", "XLABackend",
+    "PallasBackend", "PassPlanner", "resolve_backend", "run_batch",
+    "resident", "run_resident", "trace_count",
     "HostEngine", "DecompResult", "decompose",
     "CoreMaintainer", "MaintStats",
 ]

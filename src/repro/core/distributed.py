@@ -35,7 +35,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat.jaxshims import shard_map
 
 from ..graph.storage import CSRGraph
-from .engine import edge_ge_counts, hindex_bsearch, hindex_bucketed
+from .engine import hindex_bucketed
+from .resident import fused_counts, fused_hindex
 
 __all__ = ["ShardedGraph", "shard_graph", "sharded_graph_specs", "distributed_decompose"]
 
@@ -123,9 +124,9 @@ def sharded_graph_specs(
 
 # ---------------------------------------------------------------------------
 # device-local superstep pieces (run per shard inside shard_map).  The actual
-# count / h-index math is the shared backend ops in core/engine.py — the same
-# code the host XLA backend jits — applied to the shard's local edge arrays;
-# the wrappers below only gather neighbor cores from the replicated state.
+# gather + count / h-index math is the shared *fused* superstep code in
+# core/resident.py — the same body the device-resident host engine scans its
+# full table with — applied to the shard's local edge arrays.
 # ---------------------------------------------------------------------------
 def _xla_segment_sum(vals, rows, num_segments):
     return jax.ops.segment_sum(vals, rows, num_segments=num_segments)
@@ -133,9 +134,8 @@ def _xla_segment_sum(vals, rows, num_segments):
 
 def _local_counts(core, dst, rows, edge_mask, thresholds, num_rows):
     """#{local edges (v,u) : core[u] >= thresholds[row(v)]} per owned row."""
-    return edge_ge_counts(
-        jnp.take(core, dst, mode="clip"), rows, edge_mask, thresholds,
-        num_rows, segment_sum_fn=_xla_segment_sum)
+    return fused_counts(core, dst, rows, edge_mask, thresholds, num_rows,
+                        segment_sum_fn=_xla_segment_sum)
 
 
 def _local_hindex(core, dst, rows, edge_mask, c_old, num_probes):
@@ -144,8 +144,8 @@ def _local_hindex(core, dst, rows, edge_mask, c_old, num_probes):
     REPRO_UNROLL_SCANS=1 unrolls the probes so cost analysis sees every scan
     (launch/dryrun.py sets it at trace time).
     """
-    return hindex_bsearch(
-        jnp.take(core, dst, mode="clip"), rows, edge_mask, c_old, num_probes,
+    return fused_hindex(
+        core, dst, rows, edge_mask, c_old, num_probes,
         segment_sum_fn=_xla_segment_sum,
         unroll=os.environ.get("REPRO_UNROLL_SCANS") == "1")
 

@@ -263,6 +263,10 @@ class ComputeBackend:
     # full-table backend (pallas) can skip the host gather where the driver
     # needs nothing but the I/O charge (plain SemiCore).
     consumes_gather = True
+    # device backends run the whole fixpoint device-resident (resident.py):
+    # node state + edge table uploaded once, many passes per host round-trip
+    # (REPRO_DEVICE_RESIDENT=0 falls back to the per-pass loop below).
+    device_resident = False
 
     # -- lifecycle hooks (no-ops by default) --------------------------------
     def bind(self, planner: "PassPlanner") -> None:
@@ -323,22 +327,87 @@ class NumpyBackend(ComputeBackend):
         return compute_cnt_batch(vals, seg_ptr, thresholds)
 
 
-class XLABackend(ComputeBackend):
+class DeviceBackend(ComputeBackend):
+    """Shared device-residency machinery of the xla / pallas backends.
+
+    The flat merged edge table is built and uploaded once per *graph
+    version* — a :class:`~repro.core.resident.ResidentStructure` keyed by
+    the planner's structure token — and reused across runs, supersteps, and
+    (on a long-lived ``CoreMaintainer`` with ``retain_structure``) across
+    ``apply_batch`` calls whose batches turned out structure-free.  This is
+    the fix for PR 3's per-pass re-upload (`XLABackend._pack`) and per-bind
+    O(m) ``np.repeat`` rebuild (`PallasBackend.bind`): structure moves to
+    the device exactly once per distinct graph version.
+
+    ``retain_structure=False`` (the default) keeps the one-shot
+    ``decompose`` memory guarantee: ``unbind`` drops the host + device
+    edge-table copies when the result is built.
+    """
+
+    device_resident = True
+    # set by long-lived owners (CoreMaintainer): keep the structure cache
+    # across unbind so the next batch on an unchanged graph re-uploads nothing
+    retain_structure = False
+
+    def __init__(self):
+        self._resident = None
+        self.structure_builds = 0  # cache-miss counter (tests / bench)
+
+    def bind_resident(self, planner: "PassPlanner"):
+        """The device-resident working set for the planner's current graph
+        version; cached, rebuilt only on structural change."""
+        from .resident import build_structure
+
+        planner.eng._sync()
+        rs = self._resident
+        if rs is not None and rs.matches(planner):
+            return rs
+        rs = build_structure(planner)
+        self._validate_structure(rs)
+        self.structure_builds += 1
+        self._resident = rs
+        return rs
+
+    def _validate_structure(self, rs) -> None:
+        """Backend-specific structure checks (pallas float32 range)."""
+
+    def resident_substrate(self, planner: "PassPlanner") -> tuple:
+        """(kind, block_edges, interpret) — the static key of the resident
+        superstep jit for this backend."""
+        raise NotImplementedError
+
+    def release_resident(self) -> None:
+        if not self.retain_structure:
+            self._resident = None
+
+    def unbind(self):
+        self.release_resident()
+
+
+class XLABackend(DeviceBackend):
     """jit'd binary-search h-index over ``jax.ops.segment_sum`` — the same
     shared ops (:func:`edge_ge_counts` / :func:`hindex_bsearch`) the SPMD
-    engine consumes, applied to host-gathered frontier segments.
+    engine consumes.
 
-    Inputs are padded to powers of two (edges and segments independently) so
+    The default path is device-resident (resident.py): the edge table is
+    uploaded once at bind and the whole fixpoint runs on device.  The
+    per-pass methods below remain as the legacy / direct-use path
+    (``REPRO_DEVICE_RESIDENT=0``): they operate on host-gathered frontier
+    segments padded to powers of two (edges and segments independently) so
     jit recompiles O(log) times per graph instead of once per frontier size.
     """
 
     name = "xla"
 
     def __init__(self):
+        super().__init__()
         # one-slot pack memo: a SemiCore* pass calls h_index then compute_cnt
         # with the *same* (vals, seg_ptr) arrays — pack and ship them once.
         # Holding the key arrays keeps their ids valid for the identity test.
         self._pack_memo: tuple | None = None
+
+    def resident_substrate(self, planner):
+        return ("xla", 0, False)
 
     def _pack(self, vals, seg_ptr):
         import jax.numpy as jnp
@@ -362,6 +431,7 @@ class XLABackend(ComputeBackend):
 
     def unbind(self):
         self._pack_memo = None
+        self.release_resident()
 
     def h_index(self, vals, seg_ptr, c_old):
         P = len(seg_ptr) - 1
@@ -395,7 +465,7 @@ class XLABackend(ComputeBackend):
         return np.asarray(cnt[:P]).astype(np.int64)
 
 
-class PallasBackend(ComputeBackend):
+class PallasBackend(DeviceBackend):
     """The paper's block discipline at the kernel layer (DESIGN.md §6, §11).
 
     The full edge table lives as one flat blocked axis (HBM); every pass
@@ -406,6 +476,14 @@ class PallasBackend(ComputeBackend):
     mask is fixed across the probes of a pass, mirroring the paper's one
     read I/O per touched block per pass) and reported on the result as
     ``kernel_blocks_skipped`` alongside the planner's ``edge_block_reads``.
+
+    The default path runs the whole fixpoint device-resident (resident.py)
+    with the block-activity mask derived on-device from the frontier state;
+    the per-pass methods below serve the ``REPRO_DEVICE_RESIDENT=0`` legacy
+    loop.  Either way the edge table is the shared
+    :class:`~repro.core.resident.ResidentStructure` — built and uploaded
+    once per graph version, not per bind (the old per-``apply_batch``
+    O(m) ``np.repeat`` rebuild).
 
     ``interpret=None`` (the default) auto-selects: compiled kernels on a TPU
     host, the Pallas interpreter everywhere else (the only option on CPU
@@ -418,53 +496,63 @@ class PallasBackend(ComputeBackend):
 
     def __init__(self, *, block_edges: int | None = None,
                  interpret: bool | None = None):
+        super().__init__()
         self.block_edges = block_edges
         self.interpret = interpret
         self.kernel_blocks_active = 0
         self.kernel_blocks_skipped = 0
         self.passes = 0
 
+    def _resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        import jax
+
+        return jax.default_backend() != "tpu"
+
+    def _block_edges(self, planner) -> int:
+        be = self.block_edges or min(planner.reader.block_edges, 512)
+        return max(1, int(be))
+
+    def resident_substrate(self, planner):
+        return ("pallas", self._block_edges(planner),
+                self._resolve_interpret())
+
+    def _validate_structure(self, rs) -> None:
+        # the kernel accumulates per-node counts in float32 (one-hot matmul +
+        # scatter epilogue, kernels/ops.py): exact only below 2**24 — fail
+        # loudly instead of converging to a silently-wrong core array
+        if rs.dmax >= (1 << 24):
+            raise ValueError(
+                f"pallas backend: max degree {rs.dmax} exceeds the float32 "
+                "integer-exact range (2**24) of the blocked segment-sum "
+                "kernel; use the xla or numpy backend for this graph"
+            )
+
     # -- lifecycle ----------------------------------------------------------
     def bind(self, planner):
-        import jax
-        import jax.numpy as jnp
-
-        self._interpret = (self.interpret if self.interpret is not None
-                           else jax.default_backend() != "tpu")
+        self._interpret = self._resolve_interpret()
         # per-run report: active + skipped = total kernel blocks x passes
         self.kernel_blocks_active = 0
         self.kernel_blocks_skipped = 0
         self.passes = 0
-        nbr_flat, seg_ptr = planner.full_structure()
+        rs = self.bind_resident(planner)  # cached across unchanged versions
         self.n = planner.n
-        lens = np.diff(seg_ptr)
-        # the kernel accumulates per-node counts in float32 (one-hot matmul +
-        # scatter epilogue, kernels/ops.py): exact only below 2**24 — fail
-        # loudly instead of converging to a silently-wrong core array
-        dmax = int(lens.max()) if len(lens) else 0
-        if dmax >= (1 << 24):
-            raise ValueError(
-                f"pallas backend: max degree {dmax} exceeds the float32 "
-                "integer-exact range (2**24) of the blocked segment-sum "
-                "kernel; use the xla or numpy backend for this graph"
-            )
-        rows = np.repeat(np.arange(self.n, dtype=np.int64), lens)
-        self.rows = rows.astype(np.int32)
-        self.nbr = np.asarray(nbr_flat, dtype=np.int32)
-        self.seg_ptr = seg_ptr  # flat-table offsets, for block coverage
-        be = self.block_edges or min(planner.reader.block_edges, 512)
-        self.be = max(1, int(be))
-        self.nb = -(-max(len(self.nbr), 1) // self.be)
-        self._rows_j = jnp.asarray(self.rows)
-        self._nbr_j = jnp.asarray(self.nbr)
+        self.E = rs.E
+        self.seg_ptr = rs.seg_ptr  # flat-table offsets, for block coverage
+        self.be = self._block_edges(planner)
+        self.nb = -(-max(rs.E, 1) // self.be)
+        self._rows_j = rs.rows_j
+        self._nbr_j = rs.nbr_j
 
     def unbind(self):
-        # the next run re-binds from scratch; don't keep an O(m) edge-table
-        # copy (host + device) alive on a long-lived maintainer in between
-        for attr in ("rows", "nbr", "seg_ptr", "_rows_j", "_nbr_j",
+        # don't keep per-pass state alive on a long-lived maintainer between
+        # runs; the version-keyed structure cache obeys retain_structure
+        for attr in ("seg_ptr", "_rows_j", "_nbr_j",
                      "_core0_j", "_active_j", "_frontier"):
             if hasattr(self, attr):
                 delattr(self, attr)
+        self.release_resident()
 
     def begin_pass(self, frontier, core):
         import jax.numpy as jnp
@@ -475,7 +563,7 @@ class PallasBackend(ComputeBackend):
         active[np.asarray(frontier, dtype=np.int64)] = True
         self._active_j = jnp.asarray(active)
         self._frontier = np.asarray(frontier, dtype=np.int64)
-        if len(self.rows):
+        if self.E:
             # block activity from the frontier's flat-table spans, O(F + nb)
             # (a kernel block is active iff some frontier node's contiguous
             # edge range covers it — same mask the kernel derives per-row)
@@ -503,7 +591,7 @@ class PallasBackend(ComputeBackend):
         F = len(self._frontier)
         c_old = np.asarray(c_old, dtype=np.int64)
         cmax = int(c_old.max()) if F else 0
-        if F == 0 or cmax == 0 or len(self.nbr) == 0:
+        if F == 0 or cmax == 0 or self.E == 0:
             return np.zeros(F, dtype=np.int64)
         hindex, _ = _pallas_full_ops(self.be, self._interpret)
         hi = np.zeros(self.n, dtype=np.int32)
@@ -517,7 +605,7 @@ class PallasBackend(ComputeBackend):
         import jax.numpy as jnp
 
         F = len(self._frontier)
-        if F == 0 or len(self.nbr) == 0:
+        if F == 0 or self.E == 0:
             return np.zeros(F, dtype=np.int64)
         _, counts = _pallas_full_ops(self.be, self._interpret)
         thr = np.zeros(self.n, dtype=np.int32)
@@ -698,7 +786,8 @@ class PassPlanner:
 def run_batch(engine, algorithm: str, backend=None, *,
               core: np.ndarray | None = None,
               cnt: np.ndarray | None = None,
-              rebind: bool = True) -> DecompResult:
+              rebind: bool = True,
+              superstep_chunk: int | None = None) -> DecompResult:
     """Run a batch-schedule decomposition on ``engine`` with ``backend``.
 
     The three paper algorithms differ only in frontier policy:
@@ -714,8 +803,19 @@ def run_batch(engine, algorithm: str, backend=None, *,
     backend the caller already bound to this engine (:func:`warm_settle`'s
     extra cnt pass stays inside one bind scope, so the kernel-block report
     covers it just like the planner's read counters do).
+
+    Device backends default to the device-resident fixpoint (resident.py):
+    state and edge table upload once, many fused passes per host round-trip,
+    planner accounting replayed bit-identically from the per-pass frontier
+    summaries.  ``REPRO_DEVICE_RESIDENT=0`` selects the per-pass loop below.
     """
     backend = resolve_backend(backend)
+    if backend.device_resident and rebind:
+        from .resident import resident_enabled, run_resident
+
+        if resident_enabled():
+            return run_resident(engine, algorithm, backend, core=core,
+                                cnt=cnt, superstep_chunk=superstep_chunk)
     planner = engine.planner
     n = engine.n
     if rebind:
@@ -812,7 +912,8 @@ def run_batch(engine, algorithm: str, backend=None, *,
 
 
 def warm_settle(engine, core0: np.ndarray, applied_inserts: int,
-                backend=None) -> DecompResult:
+                backend=None, *,
+                superstep_chunk: int | None = None) -> DecompResult:
     """Settle to the exact decomposition from a stale ``core0`` after
     structural updates: the shared maintenance / recovery discipline
     (DESIGN.md §9, §11).
@@ -830,6 +931,16 @@ def warm_settle(engine, core0: np.ndarray, applied_inserts: int,
         np.asarray(core0, dtype=np.int64) + int(applied_inserts),
         engine.degrees(),
     ).astype(np.int64)
+    if backend.device_resident:
+        from .resident import resident_enabled, run_resident
+
+        if resident_enabled():
+            # same discipline, device-resident: the exact-cnt scan runs on
+            # the bound structure (charged identically) and the settle
+            # passes continue on device without re-downloading (core, cnt)
+            return run_resident(engine, "semicore*", backend, core=warm,
+                                initial_cnt_scan=True,
+                                superstep_chunk=superstep_chunk)
     backend.bind(engine.planner)
     all_nodes = np.arange(n, dtype=np.int64)
     backend.begin_pass(all_nodes, warm)

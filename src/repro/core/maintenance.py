@@ -24,7 +24,7 @@ import numpy as np
 
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
-from .engine import resolve_backend, warm_settle
+from .engine import ComputeBackend, resolve_backend, warm_settle
 from .semicore import HostEngine
 
 __all__ = ["MaintStats", "BatchMaintStats", "CoreMaintainer"]
@@ -75,15 +75,28 @@ class CoreMaintainer:
         state: tuple[np.ndarray, np.ndarray] | None = None,
         pool_blocks: int = 1,
         backend=None,
+        superstep_chunk: int | None = None,
     ):
         self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
         self.engine = HostEngine(self.bg, block_edges, pool_blocks=pool_blocks)
         self.backend = resolve_backend(backend)
+        self.superstep_chunk = superstep_chunk
+        if self.backend.device_resident and not isinstance(
+                backend, ComputeBackend):
+            # long-lived owner of a backend it created itself: keep the
+            # device-resident edge table cached across apply_batch calls —
+            # it is version-keyed, so a batch that changed structure rebuilds
+            # it and a no-op batch re-uploads nothing (DESIGN.md §12).  A
+            # caller-supplied instance is left untouched: its one-shot
+            # unbind-drops-everything guarantee stays the caller's to manage.
+            self.backend.retain_structure = True
         if state is None:
             if self.backend.name == "numpy":
                 r = self.engine.semicore_star("seq", backend="numpy")
             else:
-                r = self.engine.semicore_star("batch", backend=self.backend)
+                r = self.engine.semicore_star(
+                    "batch", backend=self.backend,
+                    superstep_chunk=superstep_chunk)
             self.core, self.cnt = r.core, r.cnt
         else:
             self.core = np.asarray(state[0], dtype=np.int64).copy()
@@ -174,7 +187,8 @@ class CoreMaintainer:
                 noop += 1
         comp = iters = 0
         if nd or ni:
-            r = warm_settle(self.engine, self.core, ni, self.backend)
+            r = warm_settle(self.engine, self.core, ni, self.backend,
+                            superstep_chunk=self.superstep_chunk)
             self.core, self.cnt = r.core, r.cnt
             comp, iters = r.node_computations, r.iterations
         io = self._io_delta(snap)

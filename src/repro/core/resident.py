@@ -1,0 +1,617 @@
+"""Device-resident fixpoint: the whole batch superstep loop on the device.
+
+PR 3's backend layer made the arithmetic pluggable but kept the *loop* on the
+host: every pass re-uploaded node state (and, for the xla backend, re-packed
+the frontier's edge segments), ran one jitted op, and downloaded the result —
+~27 host↔device round-trips and O(passes) retraces per decompose, which made
+the accelerator backends 20–100× slower than numpy in wall-clock despite
+walking identical passes.  This module is the fix (DESIGN.md §12):
+
+* **Residency** — ``core``, ``cnt``, the active/frontier mask, and the flat
+  edge table ``(nbr, rows)`` are uploaded once at bind.  The edge table is
+  cached in a :class:`ResidentStructure` keyed by the planner's structure
+  token (base CSR identity + ``BufferedGraph.version``), so a long-lived
+  ``CoreMaintainer`` re-binding after a no-op batch — or re-running on an
+  unchanged graph — re-uploads nothing.
+
+* **Fused superstep** — one pass (h-index binary-search probes → cnt refresh
+  → push rule → ``cnt(v) < core(v)`` frontier gating → convergence flag) is
+  a single traced function; ``lax.scan`` runs ``chunk`` passes per host
+  round-trip, each gated by ``lax.cond`` so post-convergence slots cost
+  nothing.  The jit is cached per (substrate, algorithm, probe count), so
+  compiles per decompose are O(1) — independent of pass count — and O(log
+  kmax) across graphs of one shape (the probe count is the only
+  value-dependent static).
+
+* **Accounting parity** — the chunk returns a small summary (per-pass update
+  counts + the pinned per-pass frontier masks) pulled back once per chunk;
+  the host *replays* frontier evolution through the same
+  :class:`~repro.core.engine.PassPlanner` charges the per-pass path makes
+  (edge-block coverage, node-table scans, pallas kernel-block activity).
+  Because every backend computes the same exact integer fixpoint, the
+  replayed frontiers are identical sets to the numpy backend's — so
+  ``edge_block_reads`` / ``node_table_reads`` / ``kernel_blocks_*`` stay
+  bit-identical, as the differential sweep asserts.
+
+The shared :func:`fused_hindex` / :func:`fused_counts` helpers (gather
+neighbor cores + probe loop in one traced body) are also what the SPMD
+engine's per-shard superstep consumes (``distributed.py``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+__all__ = [
+    "ResidentStructure",
+    "build_structure",
+    "run_resident",
+    "resident_enabled",
+    "trace_count",
+    "chunk_len",
+    "fused_hindex",
+    "fused_counts",
+    "RESIDENT_ENV_VAR",
+    "CHUNK_ENV_VAR",
+    "DEFAULT_CHUNK",
+]
+
+RESIDENT_ENV_VAR = "REPRO_DEVICE_RESIDENT"
+CHUNK_ENV_VAR = "REPRO_RESIDENT_CHUNK"
+# Passes per host round-trip.  Small enough that the per-chunk frontier
+# record (chunk × n bools) stays negligible next to the edge table; large
+# enough that dispatch overhead amortizes (a typical decompose converges in
+# ~2-4 chunks).  CoreGraphConfig.superstep_chunk / REPRO_RESIDENT_CHUNK tune.
+DEFAULT_CHUNK = 8
+
+# Incremented at *trace* time by every resident jit body: retraces — not
+# calls — bump it, so tests and the benchmark can count compiles per
+# decompose (the O(passes)-retrace regression guard).
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    """Total resident-path jit traces so far in this process."""
+    return _TRACE_COUNT[0]
+
+
+def resident_enabled() -> bool:
+    """Device residency is the default for device backends;
+    ``REPRO_DEVICE_RESIDENT=0`` falls back to the per-pass PR 3 path."""
+    return os.environ.get(RESIDENT_ENV_VAR, "1") != "0"
+
+
+def chunk_len(explicit: int | None = None) -> int:
+    """Effective passes-per-round-trip: explicit argument (the
+    ``superstep_chunk`` threaded from configs/owners) > env > default."""
+    if explicit is not None:
+        return max(1, int(explicit))
+    try:
+        return max(1, int(os.environ.get(CHUNK_ENV_VAR, DEFAULT_CHUNK)))
+    except ValueError:
+        return DEFAULT_CHUNK
+
+
+# ===========================================================================
+# Fused ops: neighbor gather + probe loop in one traced body.  Shared between
+# the resident superstep below and the SPMD engine's per-shard superstep.
+# ===========================================================================
+def fused_counts(core, dst, rows, edge_mask, thresholds, num_rows,
+                 *, segment_sum_fn):
+    """#{edges (v,u) : core[u] >= thresholds[row(v)]} per row (Eq. 2)."""
+    import jax.numpy as jnp
+
+    from .engine import edge_ge_counts
+
+    return edge_ge_counts(
+        jnp.take(core, dst, mode="clip"), rows, edge_mask, thresholds,
+        num_rows, segment_sum_fn=segment_sum_fn)
+
+
+def fused_hindex(core, dst, rows, edge_mask, c_old, num_probes,
+                 *, segment_sum_fn, unroll: bool = False):
+    """Binary-search h = max k <= c_old with count_ge(k) >= k (Eq. 1)."""
+    import jax.numpy as jnp
+
+    from .engine import hindex_bsearch
+
+    return hindex_bsearch(
+        jnp.take(core, dst, mode="clip"), rows, edge_mask, c_old, num_probes,
+        segment_sum_fn=segment_sum_fn, unroll=unroll)
+
+
+# ===========================================================================
+# Resident structure: the flat merged edge table, uploaded once per version
+# ===========================================================================
+@dataclass
+class ResidentStructure:
+    """The device-resident working set of one graph version.
+
+    Host-side ``seg_ptr`` stays for the accounting replay (block coverage of
+    a frontier); ``graph``/``version`` form the validity token — holding the
+    graph reference keeps its identity stable for the ``is`` test.
+    """
+
+    graph: object            # base CSRGraph this structure was built from
+    version: int             # BufferedGraph.version at build time (0 if none)
+    n: int
+    E: int                   # merged flat edge count (buffered deltas applied)
+    dmax: int                # max merged degree (pallas float32-range check)
+    seg_ptr: np.ndarray      # (n+1,) int64 flat-table offsets, host
+    nbr_j: object            # (E,) int32 device — edge targets
+    rows_j: object           # (E,) int32 device — edge source per slot
+    segptr_j: object         # (n+1,) int32 device — flat-table offsets
+
+    def matches(self, planner) -> bool:
+        buffered = planner.eng.buffered
+        ver = buffered.version if buffered is not None else 0
+        return self.graph is planner.eng.graph and self.version == ver
+
+
+def build_structure(planner) -> ResidentStructure:
+    """Merged flat adjacency of all nodes, uploaded once (charge-free, like
+    the per-pass pallas bind it replaces — disk I/O stays per-pass,
+    replayed planner-side)."""
+    import jax.numpy as jnp
+
+    planner.eng._sync()
+    nbr_flat, seg_ptr = planner.full_structure()
+    n = planner.n
+    if len(nbr_flat) >= (1 << 31) or n >= (1 << 31):
+        # the device table is int32 end-to-end (ids, rows, seg_ptr offsets;
+        # jax x64 is off) — fail loudly instead of wrapping offsets negative
+        # and converging to a silently-wrong core array
+        raise ValueError(
+            f"device-resident table needs int32 offsets: 2m={len(nbr_flat)} "
+            f"n={n} exceeds 2**31; use the numpy backend (or shard via "
+            "distributed.py) for this graph")
+    lens = np.diff(seg_ptr)
+    rows = np.repeat(np.arange(n, dtype=np.int64), lens).astype(np.int32)
+    buffered = planner.eng.buffered
+    return ResidentStructure(
+        graph=planner.eng.graph,
+        version=buffered.version if buffered is not None else 0,
+        n=n,
+        E=int(len(nbr_flat)),
+        dmax=int(lens.max()) if len(lens) else 0,
+        seg_ptr=np.asarray(seg_ptr, dtype=np.int64),
+        nbr_j=jnp.asarray(np.asarray(nbr_flat, dtype=np.int32)),
+        rows_j=jnp.asarray(rows),
+        segptr_j=jnp.asarray(np.asarray(seg_ptr, dtype=np.int32)),
+    )
+
+
+# ===========================================================================
+# The fused, chunked superstep jits (cached per substrate × algorithm)
+# ===========================================================================
+def _sorted_segsum(segptr):
+    """Segment-sum over the resident table's *sorted* rows: prefix-sum +
+    boundary gathers instead of a scatter (XLA CPU scatters serialize; the
+    cumsum path is what makes the resident loop run at numpy-like speed).
+    Exact: integer cumsum, E < 2**31."""
+    import jax.numpy as jnp
+
+    def segsum(vals):
+        cs = jnp.concatenate(
+            [jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
+        return (jnp.take(cs, segptr[1:], mode="clip")
+                - jnp.take(cs, segptr[:-1], mode="clip"))
+
+    return segsum
+
+
+def _substrate(kind: str, block_edges: int, interpret: bool):
+    """segment_sum_fn factory: given the pass's structure + activity mask,
+    return the (vals, rows, num_segments) reduction the shared probe ops
+    consume — the blocked DMA-skipping kernel for pallas, the sorted
+    prefix-sum reduction for xla."""
+    if kind == "pallas":
+        from ..kernels.ops import make_superstep_segsum
+
+        def for_pass(rows, segptr, node_active, num_segments):
+            apply_ = make_superstep_segsum(
+                rows, node_active, num_segments,
+                block_edges=block_edges, interpret=interpret)
+            return lambda vals, _rows, _ns: apply_(vals)
+    else:
+        def for_pass(rows, segptr, node_active, num_segments):
+            apply_ = _sorted_segsum(segptr)
+            return lambda vals, _rows, _ns: apply_(vals)
+    return for_pass
+
+
+@lru_cache(maxsize=None)
+def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str):
+    """Build + jit the chunked superstep for one substrate × algorithm.
+
+    ``num_probes`` / ``num_segments`` / ``chunk`` are static: one compile per
+    decompose (jax re-traces only on new shapes or probe counts — O(log kmax)
+    across graphs, never O(passes)).
+
+    Node-state bookkeeping that scatters along unsorted ``nbr`` (the push
+    rule, changed-neighbor propagation) is rewritten through the undirected
+    symmetry — edge (v→u) exists iff (u→v) does — as a *sorted* row
+    reduction, so the whole superstep runs scatter-free (prefix sums +
+    gathers; XLA CPU scatters would serialize it).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    for_pass = _substrate(kind, block_edges, interpret)
+
+    def hindex_pass(core, active, nbr, rows, segptr, num_probes, n):
+        segsum = for_pass(rows, segptr, active, n)
+        mask = jnp.ones(rows.shape, jnp.bool_)
+        c_old = jnp.where(active, core, 0)
+        return fused_hindex(core, nbr, rows, mask, c_old, num_probes,
+                            segment_sum_fn=segsum)
+
+    if algorithm == "semicore":
+        # every node, every pass; done after the first no-update pass
+        def chunk(core, done, nbr, rows, segptr, *, num_probes, num_segments,
+                  chunk):
+            _TRACE_COUNT[0] += 1
+            all_active = jnp.ones((num_segments,), jnp.bool_)
+
+            def run(args):
+                core, _ = args
+                h = hindex_pass(core, all_active, nbr, rows, segptr,
+                                num_probes, num_segments)
+                upd = jnp.sum((h != core).astype(jnp.int32))
+                return (h, upd == 0), upd
+
+            def skip(args):
+                core, done = args
+                return (core, done), jnp.int32(0)
+
+            def step(carry, _):
+                core, done = carry
+                carry2, upd = jax.lax.cond(done, skip, run, (core, done))
+                return carry2, (upd, ~done)
+
+            (core, done), (upds, ran) = jax.lax.scan(
+                step, (core, done), None, length=chunk)
+            return core, done, upds, ran
+
+        return jax.jit(chunk,
+                       static_argnames=("num_probes", "num_segments", "chunk"))
+
+    if algorithm == "semicore+":
+        # neighbors of changed nodes (Lemma 4.1), alive nodes only
+        def chunk(core, active, nbr, rows, segptr, *, num_probes,
+                  num_segments, chunk):
+            _TRACE_COUNT[0] += 1
+            row_sum = _sorted_segsum(segptr)
+
+            def run(args):
+                core, active = args
+                h = hindex_pass(core, active, nbr, rows, segptr, num_probes,
+                                num_segments)
+                changed = active & (h != core)
+                core2 = jnp.where(active, h, core)
+                # u is next-frontier iff some neighbor changed — by symmetry
+                # a row reduction over u's own (sorted) segment
+                touched = row_sum(
+                    jnp.take(changed, nbr, mode="clip").astype(jnp.int32))
+                active2 = (touched > 0) & (core2 > 0)
+                return (core2, active2), jnp.sum(changed.astype(jnp.int32))
+
+            def skip(args):
+                return args, jnp.int32(0)
+
+            def step(carry, _):
+                _, active = carry
+                ran = jnp.any(active)
+                carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                return carry2, (active, upd, ran)
+
+            (core, active), (fronts, upds, ran) = jax.lax.scan(
+                step, (core, active), None, length=chunk)
+            done = ~jnp.any(active)
+            return core, active, done, fronts, upds, ran
+
+        return jax.jit(chunk,
+                       static_argnames=("num_probes", "num_segments", "chunk"))
+
+    if algorithm == "semicore*":
+        # cnt-gated (Lemma 4.2) with exact cnt maintenance under
+        # simultaneous updates: refresh vs pass-start values, then the
+        # UpdateNbrCnt push rule (DESIGN.md §2) — all on device
+        def chunk(core, cnt, active, nbr, rows, segptr, *, num_probes,
+                  num_segments, chunk):
+            _TRACE_COUNT[0] += 1
+            row_sum = _sorted_segsum(segptr)
+
+            def run(args):
+                core, cnt, active = args
+                segsum = for_pass(rows, segptr, active, num_segments)
+                mask = jnp.ones(rows.shape, jnp.bool_)
+                nbr_vals = jnp.take(core, nbr, mode="clip")  # pass-start
+                c_old = jnp.where(active, core, 0)
+                from .engine import edge_ge_counts, hindex_bsearch
+                h = hindex_bsearch(nbr_vals, rows, mask, c_old, num_probes,
+                                   segment_sum_fn=segsum)
+                upd = jnp.sum((active & (h != core)).astype(jnp.int32))
+                core2 = jnp.where(active, h, core)
+                # (1) recompute cnt of the frontier vs pass-start values
+                thr = jnp.where(active, h, 0)
+                refreshed = edge_ge_counts(nbr_vals, rows, mask, thr,
+                                           num_segments,
+                                           segment_sum_fn=segsum)
+                # (2) push decrements: dec[u] = #{edges (v in F -> u) :
+                #     core_now(u) in (h(v), c_old(v)]} — by symmetry summed
+                #     over u's own sorted segment, v = nbr[e]
+                core2_row = jnp.take(core2, rows, mode="clip")
+                act_nbr = jnp.take(active, nbr, mode="clip")
+                h_nbr = jnp.take(h, nbr, mode="clip")
+                c_old_nbr = jnp.take(core, nbr, mode="clip")
+                push = act_nbr & (core2_row > h_nbr) & (core2_row <= c_old_nbr)
+                dec = row_sum(push.astype(jnp.int32))
+                cnt2 = jnp.where(active, refreshed, cnt) - dec
+                active2 = (cnt2 < core2) & (core2 > 0)
+                return (core2, cnt2, active2), upd
+
+            def skip(args):
+                return args, jnp.int32(0)
+
+            def step(carry, _):
+                _, _, active = carry
+                ran = jnp.any(active)
+                carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                return carry2, (active, upd, ran)
+
+            (core, cnt, active), (fronts, upds, ran) = jax.lax.scan(
+                step, (core, cnt, active), None, length=chunk)
+            done = ~jnp.any(active)
+            return core, cnt, active, done, fronts, upds, ran
+
+        return jax.jit(chunk,
+                       static_argnames=("num_probes", "num_segments", "chunk"))
+
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+@lru_cache(maxsize=None)
+def _counts_all_fn(kind: str, block_edges: int, interpret: bool):
+    """Full-table exact-cnt scan (warm_settle's Eq. 2 prologue), resident."""
+    import jax
+    import jax.numpy as jnp
+
+    for_pass = _substrate(kind, block_edges, interpret)
+
+    def counts_all(core, nbr, rows, segptr, *, num_segments):
+        _TRACE_COUNT[0] += 1
+        all_active = jnp.ones((num_segments,), jnp.bool_)
+        segsum = for_pass(rows, segptr, all_active, num_segments)
+        mask = jnp.ones(rows.shape, jnp.bool_)
+        return fused_counts(core, nbr, rows, mask, core, num_segments,
+                            segment_sum_fn=segsum)
+
+    return jax.jit(counts_all, static_argnames=("num_segments",))
+
+
+# ===========================================================================
+# Host-side accounting replay
+# ===========================================================================
+def _replay_kernel_blocks(tally: dict | None, rs: ResidentStructure,
+                          be: int, nb: int, frontier: np.ndarray) -> None:
+    """Kernel-block activity of one pass over ``frontier`` — the pallas
+    ``begin_pass`` coverage formula (spans over the merged flat table),
+    verbatim, so the resident report matches the per-pass path bit-for-bit
+    (including its ``if self.E`` guard: an edgeless table has no kernel
+    blocks to charge)."""
+    if tally is None or not len(frontier) or rs.E == 0:
+        return
+    lo = rs.seg_ptr[frontier]
+    hi = rs.seg_ptr[frontier + 1]
+    nz = lo < hi
+    cov = np.zeros(nb + 1, dtype=np.int64)
+    if nz.any():
+        np.add.at(cov, lo[nz] // be, 1)
+        np.add.at(cov, (hi[nz] - 1) // be + 1, -1)
+    na = int((np.cumsum(cov[:-1]) > 0).sum())
+    tally["kernel_blocks_active"] += na
+    tally["kernel_blocks_skipped"] += nb - na
+
+
+def _replay_pass(planner, frontier: np.ndarray, tally: dict | None,
+                 rs: ResidentStructure, be: int, nb: int) -> None:
+    """Re-issue the exact planner charges one per-pass iteration makes for
+    ``frontier`` (sorted node ids): edge-block coverage over the *raw* CSR
+    ranges (what ``gather``/``charge_only`` charge), the node-table scan,
+    and the pallas kernel-block activity."""
+    if not len(frontier):
+        return
+    planner.charge_only(frontier)
+    planner.account_node_scan(int(frontier[0]), int(frontier[-1]))
+    _replay_kernel_blocks(tally, rs, be, nb, frontier)
+
+
+# ===========================================================================
+# The runner
+# ===========================================================================
+def run_resident(engine, algorithm: str, backend, *,
+                 core: np.ndarray | None = None,
+                 cnt: np.ndarray | None = None,
+                 initial_cnt_scan: bool = False,
+                 superstep_chunk: int | None = None):
+    """Run a batch-schedule decomposition with the fixpoint device-resident.
+
+    Mirrors :func:`engine.run_batch` pass-for-pass (same frontiers, same
+    update/computation histories, same planner accounting) but with node
+    state and the edge table living on the device across passes.  With
+    ``initial_cnt_scan`` (the warm-settle discipline), ``cnt`` is recomputed
+    exactly on device from the warm ``core`` upper bound — one accounted
+    full scan — before the SemiCore* passes.
+    """
+    import jax.numpy as jnp
+
+    from .engine import DecompResult
+
+    planner = engine.planner
+    n = engine.n
+    rs = backend.bind_resident(planner)
+    kind, be, interpret = backend.resident_substrate(planner)
+    # kernel blocks (pallas replay only; be is unused elsewhere)
+    nb = -(-max(rs.E, 1) // be) if kind == "pallas" else 0
+    tally = ({"kernel_blocks_active": 0, "kernel_blocks_skipped": 0}
+             if kind == "pallas" else None)
+    chunk = chunk_len(superstep_chunk)
+
+    warm = core is not None
+    if warm:
+        core = np.asarray(core, dtype=np.int64).copy()
+    else:
+        core = engine.degrees().astype(np.int64)
+    cmax = int(core.max()) if n else 0
+    num_probes = max(1, int(np.ceil(np.log2(cmax + 2))))
+    core_j = jnp.asarray(core.astype(np.int32))
+
+    upd_hist: list = []
+    comp_hist: list = []
+    iters = 0
+    comp = 0
+    all_nodes = np.arange(n, dtype=np.int64)
+
+    def result(core_f, cnt_f):
+        rep = tally or {}
+        backend.unbind()
+        return DecompResult(
+            core=np.asarray(core_f, dtype=np.int64),
+            cnt=None if cnt_f is None else np.asarray(cnt_f, dtype=np.int64),
+            iterations=iters,
+            node_computations=comp,
+            edge_block_reads=planner.reader.reads,
+            node_table_reads=planner.reader.node_table_reads,
+            algorithm=algorithm,
+            schedule="batch",
+            updates_per_iter=upd_hist,
+            computations_per_iter=comp_hist,
+            backend=backend.name,
+            kernel_blocks_active=rep.get("kernel_blocks_active", 0),
+            kernel_blocks_skipped=rep.get("kernel_blocks_skipped", 0),
+        )
+
+    # ------------------------------------------------------------ semicore*
+    if algorithm == "semicore*":
+        if initial_cnt_scan:
+            # warm_settle prologue: one accounted full scan recomputes cnt
+            # exactly (Eq. 2) w.r.t. the warm upper bound — on device
+            planner.charge_only(all_nodes)
+            planner.account_node_scan(0, n - 1)
+            _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+            if rs.E:
+                counts_all = _counts_all_fn(kind, be, interpret)
+                cnt_j = counts_all(core_j, rs.nbr_j, rs.rows_j,
+                                   rs.segptr_j, num_segments=n)
+            else:
+                cnt_j = jnp.zeros((n,), jnp.int32)
+            cnt = np.asarray(cnt_j, dtype=np.int64)
+        elif warm:
+            cnt = np.asarray(cnt, dtype=np.int64).copy()
+            cnt_j = jnp.asarray(cnt.astype(np.int32))
+        else:
+            cnt = np.zeros(n, dtype=np.int64)
+            cnt_j = jnp.zeros((n,), jnp.int32)
+        active0 = (cnt < core) & (core > 0)
+        if rs.E == 0:
+            # edgeless table: any deficient node drops straight to h = 0 in
+            # one pass, and nothing can re-activate — numpy's loop verbatim
+            if active0.any():
+                f = np.flatnonzero(active0)
+                iters, comp = 1, len(f)
+                upd_hist.append(int((core[f] != 0).sum()))
+                comp_hist.append(len(f))
+                _replay_pass(planner, f, tally, rs, be, nb)
+                core[f] = 0
+                cnt[f] = 0
+            return result(core, cnt)
+        if not active0.any():
+            # settled warm state: zero passes, like numpy's while-loop
+            return result(core, cnt)
+        fn = _chunk_fns(kind, be, interpret, algorithm)
+        active_j = jnp.asarray(active0)
+        while True:
+            core_j, cnt_j, active_j, done, fronts, upds, ran = fn(
+                core_j, cnt_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                num_probes=num_probes, num_segments=n, chunk=chunk)
+            iters, comp = _replay_chunk(
+                planner, rs, be, nb, tally, np.asarray(fronts),
+                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                iters, comp)
+            if bool(done):
+                break
+        return result(core_j, cnt_j)
+
+    # ------------------------------------------------- semicore / semicore+
+    if rs.E == 0:
+        # h == core == degrees == 0 everywhere: semicore runs exactly one
+        # all-node pass; semicore+ starts from the all-node frontier and
+        # likewise converges on pass one (numpy loop, charge-for-charge)
+        if algorithm == "semicore" or n:
+            iters, comp = 1, n
+            upd_hist.append(0)
+            comp_hist.append(n)
+            planner.charge_only(all_nodes)
+            planner.account_node_scan(0, n - 1)
+            _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+        return result(core, None)
+
+    if algorithm == "semicore":
+        # every node, every pass — the final no-update pass included
+        fn = _chunk_fns(kind, be, interpret, algorithm)
+        done_j = jnp.asarray(False)
+        while True:
+            core_j, done_j, upds, ran = fn(
+                core_j, done_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                num_probes=num_probes, num_segments=n, chunk=chunk)
+            ran = np.asarray(ran)
+            upds = np.asarray(upds)
+            for k in range(len(ran)):
+                if not ran[k]:
+                    break
+                iters += 1
+                comp += n
+                upd_hist.append(int(upds[k]))
+                comp_hist.append(n)
+                planner.charge_only(all_nodes)
+                planner.account_node_scan(0, n - 1)
+                _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+            if bool(done_j):
+                break
+        return result(core_j, None)
+
+    if algorithm == "semicore+":
+        fn = _chunk_fns(kind, be, interpret, algorithm)
+        active_j = jnp.ones((n,), jnp.bool_)
+        while True:
+            core_j, active_j, done, fronts, upds, ran = fn(
+                core_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                num_probes=num_probes, num_segments=n, chunk=chunk)
+            iters, comp = _replay_chunk(
+                planner, rs, be, nb, tally, np.asarray(fronts),
+                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                iters, comp)
+            if bool(done):
+                break
+        return result(core_j, None)
+
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def _replay_chunk(planner, rs, be, nb, tally, fronts, upds, ran,
+                  upd_hist, comp_hist, iters, comp):
+    """Replay the planner charges for the executed passes of one chunk."""
+    for k in range(len(ran)):
+        if not ran[k]:
+            break
+        frontier = np.flatnonzero(fronts[k]).astype(np.int64)
+        iters += 1
+        comp += len(frontier)
+        upd_hist.append(int(upds[k]))
+        comp_hist.append(int(len(frontier)))
+        _replay_pass(planner, frontier, tally, rs, be, nb)
+    return iters, comp

@@ -19,6 +19,11 @@ Two schedules are provided (see DESIGN.md §2, changed assumption 2):
   The batch loop lives in :mod:`repro.core.engine` (PassPlanner + pluggable
   ComputeBackend: numpy / xla / pallas — DESIGN.md §11); ``backend=``
   selects the substrate, every backend reaches the identical fixpoint.
+  Device backends run the whole fixpoint device-resident by default
+  (:mod:`repro.core.resident`, DESIGN.md §12): node state and the edge
+  table upload once, many fused passes execute per host round-trip, and the
+  planner's I/O trace is replayed bit-identically from the per-pass
+  frontier summaries.
 
 Both schedules account I/O identically: one read I/O per distinct edge-table
 block touched per pass (single-buffer sequential scan, external-memory model),
@@ -108,9 +113,11 @@ class HostEngine:
     # =====================================================================
     # Algorithm 3: SemiCore
     # =====================================================================
-    def semicore(self, schedule: str = "seq", backend=None) -> DecompResult:
+    def semicore(self, schedule: str = "seq", backend=None,
+                 superstep_chunk: int | None = None) -> DecompResult:
         if schedule == "batch":
-            return run_batch(self, "semicore", backend)
+            return run_batch(self, "semicore", backend,
+                             superstep_chunk=superstep_chunk)
         _seq_only(backend)
         n = self.n
         core = self.degrees().astype(np.int64)
@@ -139,9 +146,11 @@ class HostEngine:
     # =====================================================================
     # Algorithm 4: SemiCore+
     # =====================================================================
-    def semicore_plus(self, schedule: str = "seq", backend=None) -> DecompResult:
+    def semicore_plus(self, schedule: str = "seq", backend=None,
+                      superstep_chunk: int | None = None) -> DecompResult:
         if schedule == "batch":
-            return run_batch(self, "semicore+", backend)
+            return run_batch(self, "semicore+", backend,
+                             superstep_chunk=superstep_chunk)
         _seq_only(backend)
         n = self.n
         core = self.degrees().astype(np.int64)
@@ -196,12 +205,14 @@ class HostEngine:
         cnt: np.ndarray | None = None,
         vrange: tuple[int, int] | None = None,
         backend=None,
+        superstep_chunk: int | None = None,
         _count_first_pass_all: bool = True,
     ) -> DecompResult:
         """Full Algorithm 5; with (core, cnt, vrange) given, runs its lines
         4-14 as a warm-started settle loop (used by SemiDelete*/SemiInsert)."""
         if schedule == "batch":
-            return run_batch(self, "semicore*", backend, core=core, cnt=cnt)
+            return run_batch(self, "semicore*", backend, core=core, cnt=cnt,
+                             superstep_chunk=superstep_chunk)
         _seq_only(backend)
         n = self.n
         warm = core is not None
@@ -282,19 +293,25 @@ def decompose(
     block_edges: int = DEFAULT_BLOCK_EDGES,
     pool_blocks: int = 1,
     backend=None,
+    superstep_chunk: int | None = None,
 ) -> DecompResult:
     """One-call core decomposition with the chosen paper algorithm.
 
     ``backend`` picks the batch-schedule compute substrate ("numpy" | "xla" |
     "pallas" | a ComputeBackend instance); ``None`` defers to the
     ``REPRO_BACKEND`` environment variable (default numpy).  The seq schedule
-    is the paper-faithful numpy reference path.
+    is the paper-faithful numpy reference path.  ``superstep_chunk`` sizes
+    the device-resident passes-per-round-trip (CoreGraphConfig field /
+    REPRO_RESIDENT_CHUNK env; DESIGN.md §12) — ignored off the resident path.
     """
     eng = HostEngine(graph, block_edges, pool_blocks=pool_blocks)
     if algorithm == "semicore":
-        return eng.semicore(schedule, backend=backend)
+        return eng.semicore(schedule, backend=backend,
+                            superstep_chunk=superstep_chunk)
     if algorithm == "semicore+":
-        return eng.semicore_plus(schedule, backend=backend)
+        return eng.semicore_plus(schedule, backend=backend,
+                                 superstep_chunk=superstep_chunk)
     if algorithm == "semicore*":
-        return eng.semicore_star(schedule, backend=backend)
+        return eng.semicore_star(schedule, backend=backend,
+                                 superstep_chunk=superstep_chunk)
     raise ValueError(f"unknown algorithm {algorithm!r}")

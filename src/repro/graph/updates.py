@@ -53,6 +53,10 @@ class BufferedGraph:
         self._deg_delta = np.zeros(graph.n, dtype=np.int64)
         self.flushes = 0
         self._flush_hooks: list = []
+        # structural version: bumped by every applied update and every flush.
+        # Consumers caching derived structure (the device-resident edge table,
+        # engine.DeviceBackend) key their caches on it.
+        self.version = 0
 
     def add_flush_hook(self, fn) -> None:
         """Register ``fn(self)`` to run after every CSR rewrite (flush).
@@ -94,6 +98,7 @@ class BufferedGraph:
             self._size += 1
         self._deg_delta[u] += 1
         self._deg_delta[v] += 1
+        self.version += 1
         self._maybe_flush()
         return True
 
@@ -111,6 +116,7 @@ class BufferedGraph:
             self._size += 1
         self._deg_delta[u] -= 1
         self._deg_delta[v] -= 1
+        self.version += 1
         self._maybe_flush()
         return True
 
@@ -159,6 +165,7 @@ class BufferedGraph:
         self._size = 0
         self._deg_delta[:] = 0
         self.flushes += 1
+        self.version += 1
         for fn in self._flush_hooks:
             fn(self)
 

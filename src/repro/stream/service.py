@@ -168,7 +168,11 @@ class CoreService:
     ``backend`` selects the batch-settle compute substrate ("numpy" | "xla" |
     "pallas", DESIGN.md §11); the numpy default keeps the paper's per-edge
     seq maintenance, any other backend ingests each batch through one
-    warm-started SemiCore* batch settle on that backend.
+    warm-started SemiCore* batch settle on that backend — device-resident by
+    default (DESIGN.md §12): the settle's node state stays on device across
+    its passes, and the uploaded edge table is version-keyed on the
+    long-lived maintainer, so a batch that turns out structure-free (all
+    no-ops) re-uploads nothing.
     """
 
     def __init__(
@@ -186,10 +190,11 @@ class CoreService:
         state: tuple[np.ndarray, np.ndarray] | None = None,
         epoch: int = 0,
         backend=None,
+        superstep_chunk: int | None = None,
     ):
         self.maintainer = CoreMaintainer(
             graph, block_edges, state=state, pool_blocks=pool_blocks,
-            backend=backend,
+            backend=backend, superstep_chunk=superstep_chunk,
         )
         self.bg: BufferedGraph = self.maintainer.bg
         self.insert_algorithm = insert_algorithm
@@ -327,6 +332,10 @@ class CoreService:
             "cache_hits": self.cache.hits,
             "cache_misses": self.cache.misses,
             "wal_appends": self.wal.appends if self.wal else 0,
+            # device-backend settles only: edge-table uploads (cache misses
+            # of the version-keyed resident structure, DESIGN.md §12)
+            "backend_structure_builds": getattr(
+                self.maintainer.backend, "structure_builds", 0),
         }
 
     # ------------------------------------------------------------- recovery
@@ -380,8 +389,9 @@ class CoreService:
                 warm_restart = True
                 bg.flush()  # one CSR rewrite so the settle scans exact lists
                 eng = HostEngine(bg, block_edges, pool_blocks=pool_blocks)
-                settle = warm_settle(eng, core0, applied_i,
-                                     service_kwargs.get("backend"))
+                settle = warm_settle(
+                    eng, core0, applied_i, service_kwargs.get("backend"),
+                    superstep_chunk=service_kwargs.get("superstep_chunk"))
                 state = (settle.core, settle.cnt)
             else:
                 state = (core0, cnt0)

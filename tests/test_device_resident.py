@@ -1,0 +1,255 @@
+"""Device-resident fixpoint (core/resident.py, DESIGN.md §12).
+
+Pins the three properties the refactor claims:
+
+* **compile count** — jit traces per decompose are O(1), independent of the
+  pass count (the PR 3 path retraced O(passes) times);
+* **trace parity** — the resident path reproduces the numpy backend's
+  paper-pinned Fig. 2/4/5 traces and the per-pass (legacy) path's
+  kernel-block report bit-for-bit;
+* **structure residency** — the uploaded edge table is version-keyed: reused
+  across runs and no-op batches, rebuilt exactly once per structural change,
+  and dropped on unbind for one-shot runs (the decompose memory guarantee).
+"""
+import numpy as np
+import pytest
+
+from repro.core import resident
+from repro.core.engine import PallasBackend, XLABackend, run_batch, warm_settle
+from repro.core.imcore import imcore_bz
+from repro.core.maintenance import CoreMaintainer
+from repro.core.semicore import HostEngine, decompose
+from repro.graph import BufferedGraph, chung_lu, paper_example_graph
+from repro.stream.service import CoreService
+
+
+# ------------------------------------------------------------ compile count
+def test_compile_count_independent_of_pass_count():
+    """A ~26-pass decompose must cost O(1) jit traces (chunk fn (+ warm-path
+    prologue), never one per pass), and a re-run with warm caches zero."""
+    g = chung_lu(4000, 16000, seed=6)
+    before = resident.trace_count()
+    r1 = decompose(g, "semicore*", "batch", block_edges=256, backend="xla")
+    first = resident.trace_count() - before
+    assert r1.iterations >= 20  # far more passes than allowed traces
+    assert first <= 2, f"{first} traces for {r1.iterations} passes"
+    before = resident.trace_count()
+    r2 = decompose(g, "semicore*", "batch", block_edges=256, backend="xla")
+    assert resident.trace_count() - before == 0
+    np.testing.assert_array_equal(r1.core, r2.core)
+
+
+def test_compile_count_pallas_interpret():
+    g = chung_lu(250, 900, gamma=2.3, seed=11)
+    decompose(g, "semicore*", "batch", block_edges=64,
+              backend="pallas-interpret")  # prime the jit cache
+    before = resident.trace_count()
+    r = decompose(g, "semicore*", "batch", block_edges=64,
+                  backend="pallas-interpret")
+    assert resident.trace_count() - before == 0
+    assert r.iterations > 2
+
+
+# -------------------------------------------------------------- trace parity
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+def test_resident_pins_paper_example_batch_traces(backend):
+    """The device-resident path must walk the paper's running example through
+    the exact batch-schedule traces the numpy backend pins (Figs. 2/4/5)."""
+    pinned = {
+        "semicore": (36, 4, 4, 4),
+        "semicore+": (26, 4, 4, 4),
+        "semicore*": (11, 3, 3, 3),
+    }
+    for algo, (comps, iters, ebr, ntr) in pinned.items():
+        r = decompose(paper_example_graph(), algo, "batch", block_edges=64,
+                      pool_blocks=1, backend=backend)
+        np.testing.assert_array_equal(r.core, [3, 3, 3, 3, 2, 2, 2, 2, 1])
+        assert r.node_computations == comps, algo
+        assert r.iterations == iters, algo
+        assert r.edge_block_reads == ebr, algo
+        assert r.node_table_reads == ntr, algo
+
+
+def test_resident_kernel_block_report_matches_per_pass_path(monkeypatch):
+    """The replayed pallas kernel-block activity must equal what the per-pass
+    (legacy) path's begin_pass accounting reports."""
+    g = chung_lu(250, 900, gamma=2.3, seed=11)
+    res = decompose(g, "semicore*", "batch", block_edges=64,
+                    backend="pallas-interpret")
+    monkeypatch.setenv(resident.RESIDENT_ENV_VAR, "0")
+    leg = decompose(g, "semicore*", "batch", block_edges=64,
+                    backend="pallas-interpret")
+    assert res.kernel_blocks_active == leg.kernel_blocks_active
+    assert res.kernel_blocks_skipped == leg.kernel_blocks_skipped
+    assert res.kernel_blocks_skipped > 0
+    np.testing.assert_array_equal(res.core, leg.core)
+    assert res.iterations == leg.iterations
+    assert res.edge_block_reads == leg.edge_block_reads
+
+
+def test_edgeless_graph_kernel_blocks_match_legacy(monkeypatch):
+    """An edgeless table has no kernel blocks: the resident replay must not
+    charge the padding block the legacy begin_pass guard skips."""
+    from repro.graph import CSRGraph
+
+    g = CSRGraph.from_edges(5, np.zeros((0, 2), np.int64))
+    r = decompose(g, "semicore", "batch", block_edges=64,
+                  backend="pallas-interpret")
+    monkeypatch.setenv(resident.RESIDENT_ENV_VAR, "0")
+    leg = decompose(g, "semicore", "batch", block_edges=64,
+                    backend="pallas-interpret")
+    assert (r.kernel_blocks_active, r.kernel_blocks_skipped) == \
+        (leg.kernel_blocks_active, leg.kernel_blocks_skipped) == (0, 0)
+    assert r.iterations == leg.iterations == 1
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+def test_legacy_per_pass_path_still_matches_numpy(monkeypatch, backend):
+    """REPRO_DEVICE_RESIDENT=0 keeps the PR 3 per-pass loop alive and exact."""
+    monkeypatch.setenv(resident.RESIDENT_ENV_VAR, "0")
+    g = chung_lu(250, 900, gamma=2.3, seed=11)
+    for algo in ("semicore", "semicore+", "semicore*"):
+        ref = decompose(g, algo, "batch", block_edges=64, backend="numpy")
+        r = decompose(g, algo, "batch", block_edges=64, backend=backend)
+        np.testing.assert_array_equal(r.core, ref.core)
+        assert r.iterations == ref.iterations
+        assert r.edge_block_reads == ref.edge_block_reads
+        assert r.node_table_reads == ref.node_table_reads
+
+
+@pytest.mark.parametrize("chunk", ["1", "3", "32"])
+def test_chunk_size_does_not_change_traces(monkeypatch, chunk):
+    """The chunk length is pure scheduling: any value walks the same passes
+    and replays the same accounting."""
+    monkeypatch.setenv(resident.CHUNK_ENV_VAR, chunk)
+    g = chung_lu(400, 1600, seed=3)
+    ref = decompose(g, "semicore*", "batch", block_edges=64, backend="numpy")
+    r = decompose(g, "semicore*", "batch", block_edges=64, backend="xla")
+    np.testing.assert_array_equal(r.core, ref.core)
+    np.testing.assert_array_equal(r.cnt, ref.cnt)
+    assert r.iterations == ref.iterations
+    assert r.edge_block_reads == ref.edge_block_reads
+    assert r.updates_per_iter == ref.updates_per_iter
+    assert r.computations_per_iter == ref.computations_per_iter
+
+
+def test_superstep_chunk_parameter_threads_through():
+    """The CoreGraphConfig.superstep_chunk knob reaches the resident runner
+    through decompose and CoreMaintainer, overriding the env default."""
+    g = chung_lu(300, 1200, seed=4)
+    ref = decompose(g, "semicore*", "batch", block_edges=64, backend="numpy")
+    r = decompose(g, "semicore*", "batch", block_edges=64, backend="xla",
+                  superstep_chunk=2)
+    np.testing.assert_array_equal(r.core, ref.core)
+    assert r.iterations == ref.iterations
+    assert r.edge_block_reads == ref.edge_block_reads
+    m = CoreMaintainer(g, block_edges=64, backend="xla", superstep_chunk=2)
+    e = g.edge_list()
+    m.apply_batch([tuple(map(int, e[0]))], [(0, 250)])
+    np.testing.assert_array_equal(m.core, imcore_bz(m.bg.materialize()))
+
+
+# ------------------------------------------------------- warm settle parity
+def test_warm_settle_resident_matches_numpy_settle():
+    """The device-resident warm settle (exact-cnt prologue + SemiCore*
+    passes, all on device) must match the numpy settle state-for-state and
+    charge-for-charge."""
+    g = chung_lu(300, 1200, seed=5)
+    core0 = decompose(g, "semicore*", "batch", backend="numpy").core
+    e = g.edge_list()
+
+    def perturbed():
+        bg = BufferedGraph(g)
+        for i in range(6):
+            assert bg.delete_edge(*map(int, e[i * 11]))
+        ins = [(1, 250), (2, 251), (3, 252)]
+        ni = sum(bg.insert_edge(u, v) for u, v in ins)
+        return bg, ni
+
+    bg_np, ni = perturbed()
+    eng_np = HostEngine(bg_np, block_edges=64)
+    r_np = warm_settle(eng_np, core0, ni, "numpy")
+    bg_x, ni_x = perturbed()
+    assert ni_x == ni
+    eng_x = HostEngine(bg_x, block_edges=64)
+    r_x = warm_settle(eng_x, core0, ni, "xla")
+    np.testing.assert_array_equal(r_x.core, r_np.core)
+    np.testing.assert_array_equal(r_x.cnt, r_np.cnt)
+    assert r_x.iterations == r_np.iterations
+    assert r_x.edge_block_reads == r_np.edge_block_reads
+    assert r_x.node_table_reads == r_np.node_table_reads
+    np.testing.assert_array_equal(r_x.core, imcore_bz(bg_x.materialize()))
+
+
+# -------------------------------------------------------- structure caching
+def test_structure_cache_reused_across_runs_and_invalidated_on_change():
+    g = chung_lu(200, 800, seed=1)
+    bg = BufferedGraph(g)
+    eng = HostEngine(bg, block_edges=64)
+    be = XLABackend()
+    be.retain_structure = True
+    r1 = run_batch(eng, "semicore*", be)
+    r2 = run_batch(eng, "semicore+", be)
+    assert be.structure_builds == 1  # second run re-uploaded nothing
+    np.testing.assert_array_equal(r1.core, r2.core)
+    u, v = map(int, g.edge_list()[0])
+    assert bg.delete_edge(u, v)  # version bump
+    r3 = run_batch(eng, "semicore*", be)
+    assert be.structure_builds == 2
+    np.testing.assert_array_equal(r3.core, imcore_bz(bg.materialize()))
+
+
+@pytest.mark.parametrize("cls", [XLABackend,
+                                 lambda: PallasBackend(interpret=True)])
+def test_one_shot_run_drops_structure_on_unbind(cls):
+    """decompose's memory guarantee: without retain_structure, no O(m)
+    edge-table copy (host or device) survives the result."""
+    be = cls()
+    eng = HostEngine(chung_lu(150, 500, seed=2), block_edges=64)
+    run_batch(eng, "semicore*", be)
+    assert be._resident is None
+
+
+def test_caller_supplied_backend_instance_is_not_mutated():
+    """CoreMaintainer only retains structure on backends it created itself;
+    a caller-supplied instance keeps its one-shot unbind guarantee."""
+    g = chung_lu(150, 500, seed=3)
+    be = XLABackend()
+    m = CoreMaintainer(g, block_edges=64, backend=be)
+    assert not be.retain_structure
+    assert be._resident is None  # the initial decompose dropped it
+    assert m.backend is be
+
+
+def test_maintainer_rebuilds_structure_only_on_structural_change():
+    g = chung_lu(200, 800, seed=7)
+    m = CoreMaintainer(g, block_edges=64, backend="xla")
+    assert m.backend.retain_structure
+    assert m.backend.structure_builds == 1  # the initial decompose
+    # a batch of pure no-ops applies nothing: no settle, no rebuild
+    non_edge = next((u, v) for u in range(3) for v in range(100, 200)
+                    if not m.bg.base.has_edge(u, v))
+    s = m.apply_batch([non_edge], [])
+    assert s.num_noops == 1 and s.num_deletes == 0
+    assert m.backend.structure_builds == 1
+    # a real batch bumps the version: exactly one rebuild for the settle
+    e = m.bg.base.edge_list()
+    s = m.apply_batch([tuple(map(int, e[3]))], [])
+    assert s.num_deletes == 1
+    assert m.backend.structure_builds == 2
+    np.testing.assert_array_equal(m.core, imcore_bz(m.bg.materialize()))
+
+
+# ------------------------------------------------------------- service path
+def test_core_service_on_device_backend_stays_exact():
+    g = chung_lu(220, 900, seed=9)
+    svc = CoreService(g, block_edges=64, backend="xla")
+    e = g.edge_list()
+    svc.ingest([("-", *map(int, e[0])), ("-", *map(int, e[7])),
+                ("+", 0, 100)])
+    svc.ingest([("+", 2, 150), ("-", *map(int, e[21]))])
+    np.testing.assert_array_equal(
+        svc.maintainer.core, imcore_bz(svc.bg.materialize()))
+    stats = svc.service_stats()
+    assert stats["backend"] == "xla"
+    assert stats["backend_structure_builds"] >= 1
