@@ -1,19 +1,37 @@
-"""Backend matrix benchmark: one superstep core, three compute substrates.
+"""Backend matrix benchmark: one superstep core, four compute substrates.
 
-Runs every batch-schedule algorithm on every compute backend (DESIGN.md §11)
-over the same graphs and records pass counts, wall time (cold = first call
-including jit compiles, warm = steady state on the device-resident caches),
-jit trace counts, planner I/O, and the pallas backend's kernel-block skip
-counts to ``benchmarks/results/backends.json``.  All backends must converge
-through identical passes to the identical core array — the script asserts it.
+Runs every batch-schedule algorithm on every compute backend (DESIGN.md §11,
+§13) over the same graphs and records pass counts, wall time (cold = first
+call including jit compiles, warm = steady state on the device-resident
+caches), jit trace counts, planner I/O, and the pallas backend's kernel-block
+skip counts to ``benchmarks/results/backends.json``.  All backends must
+converge through identical passes to the identical core array — the script
+asserts it.
 
 Two graphs: the PR 3 comparison cell (n=4k, the history in CHANGES.md) and a
-``large`` ≥200k-directed-edge cell (numpy vs xla) where the device-resident
-speedup-vs-numpy is the headline number.
+``large`` ≥200k-directed-edge cell (numpy vs xla vs shard) where the
+device-resident speedup-vs-numpy is the headline number.
+
+Perf-trajectory gate (scripts/ci.sh):
+
+    python benchmarks/bench_backends.py --emit-trajectory   # refresh baseline
+    python benchmarks/bench_backends.py --check-trajectory  # CI regression gate
+    python benchmarks/bench_backends.py --summary           # markdown table
+
+``--emit-trajectory`` measures the trajectory cell (warm walls best-of-3,
+cold walls, jit-trace counts, numpy-normalized ratios) and writes/updates the
+section for the current device count in ``BENCH_backends.json`` at the repo
+root — the committed baseline.  ``--check-trajectory`` re-measures and fails
+on a warm-wall regression beyond the tolerance band or on *any* jit-trace
+count increase (the O(passes)-retrace regression), replacing the old one-off
+"xla ≤ 40× numpy + 2s" smoke hack.  Warm walls are compared as ratios to the
+same run's numpy wall, so the gate is machine-speed independent; the band is
+``ratio <= 1.5 × baseline_ratio + 1.0`` per backend (summed over the three
+algorithms to damp small-cell noise).
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_backends.py [--quick]
-    REPRO_BACKEND=pallas PYTHONPATH=src python benchmarks/bench_backends.py --smoke
+    REPRO_BACKEND=shard PYTHONPATH=src python benchmarks/bench_backends.py --smoke
 """
 from __future__ import annotations
 
@@ -32,44 +50,49 @@ from repro.core.imcore import imcore_bz  # noqa: E402
 from repro.core.semicore import decompose  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+TRAJECTORY_BASELINE = os.path.join(REPO_ROOT, "BENCH_backends.json")
+TRAJECTORY_CURRENT = os.path.join(RESULTS, "BENCH_backends_current.json")
 ALGORITHMS = ("semicore", "semicore+", "semicore*")
-BACKENDS = ("numpy", "xla", "pallas")
+BACKENDS = ("numpy", "xla", "pallas", "shard")
 
-# smoke gate: the device-resident xla loop must stay within a loose constant
-# factor of numpy wall-clock (compile excluded via one warmup run); the
-# additive floor absorbs CI scheduling noise on a tiny graph
-SMOKE_WALL_FACTOR = 40.0
-SMOKE_WALL_FLOOR_S = 2.0
+# trajectory gate: per-backend warm-wall ratio vs numpy (summed over the
+# three algorithms) may grow at most BAND x the committed baseline ratio
+# plus FLOOR; jit-trace counts may never grow at all
+TRAJECTORY_CELL = dict(n=1200, m=4800, seed=6, block_edges=128)
+TRAJECTORY_WALL_BAND = 1.5
+TRAJECTORY_RATIO_FLOOR = 1.0
+TRAJECTORY_WARM_REPEATS = 3
 
 
-def _timed(g, algo, backend, block_edges):
+def _timed(g, algo, backend, block_edges, warm_repeats: int = 1):
     """(cold_seconds, warm_seconds, jit_traces, result) for one config."""
     t0 = resident.trace_count()
     w0 = time.perf_counter()
     r = decompose(g, algo, "batch", block_edges=block_edges, backend=backend)
     cold = time.perf_counter() - w0
     traces = resident.trace_count() - t0
-    w1 = time.perf_counter()
-    r2 = decompose(g, algo, "batch", block_edges=block_edges, backend=backend)
-    warm = time.perf_counter() - w1
-    assert np.array_equal(r.core, r2.core)
+    warm = float("inf")
+    for _ in range(max(1, warm_repeats)):
+        w1 = time.perf_counter()
+        r2 = decompose(g, algo, "batch", block_edges=block_edges,
+                       backend=backend)
+        warm = min(warm, time.perf_counter() - w1)
+        assert np.array_equal(r.core, r2.core)
     return cold, warm, traces, r
 
 
 def smoke() -> None:
-    """CI backend-matrix smoke: decompose under the REPRO_BACKEND env default,
-    check against the BZ oracle, and gate the device-resident wall-clock
-    (scripts/ci.sh runs one per backend)."""
+    """CI backend-matrix smoke: decompose under the REPRO_BACKEND env default
+    and check against the BZ oracle (scripts/ci.sh runs one per backend).
+    Wall-clock regressions are gated separately by --check-trajectory."""
     backend = os.environ.get("REPRO_BACKEND", "numpy")
     g = chung_lu(400, 1600, seed=3)
     expect = imcore_bz(g)
-    numpy_wall = 0.0
     wall = 0.0
     for algo in ALGORITHMS:
-        t0 = time.perf_counter()
         rn = decompose(g, algo, "batch", block_edges=64, backend="numpy")
-        numpy_wall += time.perf_counter() - t0
         assert np.array_equal(rn.core, expect), ("numpy", algo)
         r = decompose(g, algo, "batch", block_edges=64)  # backend from env
         t0 = time.perf_counter()
@@ -77,21 +100,20 @@ def smoke() -> None:
         wall += time.perf_counter() - t0
         assert np.array_equal(r.core, expect), (backend, algo)
         assert r.backend == backend, (r.backend, backend)
+        # identical passes + planner trace is the layer's core invariant
+        assert r.iterations == rn.iterations, (backend, algo)
+        assert r.edge_block_reads == rn.edge_block_reads, (backend, algo)
     skipped = r.kernel_blocks_skipped  # last run: semicore*
     print(f"backend smoke OK: backend={backend} kmax={r.kmax} "
           f"iters={r.iterations} io_blocks={r.edge_block_reads} "
-          f"kernel_blocks_skipped={skipped} wall={wall:.3f}s "
-          f"(numpy {numpy_wall:.3f}s)")
+          f"kernel_blocks_skipped={skipped} num_shards={r.num_shards} "
+          f"wall={wall:.3f}s")
     if backend == "pallas":
         assert skipped > 0, "SemiCore* frontier shrinkage must skip blocks"
-    if backend == "xla" and resident.resident_enabled():
-        # the device-resident sanity gate: within a loose multiple of numpy.
-        # Not applied to the REPRO_DEVICE_RESIDENT=0 legacy leg, whose
-        # per-pass loop is exactness-checked but expected to be slow.
-        limit = SMOKE_WALL_FACTOR * numpy_wall + SMOKE_WALL_FLOOR_S
-        assert wall <= limit, (
-            f"xla wall {wall:.3f}s exceeds {limit:.3f}s "
-            f"({SMOKE_WALL_FACTOR}x numpy + {SMOKE_WALL_FLOOR_S}s)")
+    if backend == "shard":
+        import jax
+
+        assert r.num_shards == len(jax.devices()), r.num_shards
 
 
 def _bench_graph(g, block_edges, backends, label):
@@ -118,6 +140,8 @@ def _bench_graph(g, block_edges, backends, label):
                 "node_table_reads": r.node_table_reads,
                 "kernel_blocks_active": r.kernel_blocks_active,
                 "kernel_blocks_skipped": r.kernel_blocks_skipped,
+                "num_shards": r.num_shards,
+                "shard_pad_edges": r.shard_pad_edges,
             }
             rows.append(row)
             print(f"[{label}] {backend:>6} {algo:<10} warm={warm:7.3f}s "
@@ -134,15 +158,194 @@ def _bench_graph(g, block_edges, backends, label):
     return rows
 
 
+# ============================================================= trajectory
+def _measure_trajectory() -> dict:
+    """One trajectory section: the 4-backend × 3-algorithm matrix on the
+    trajectory cell, with warm walls best-of-N and numpy-normalized ratios."""
+    import jax
+
+    cell = TRAJECTORY_CELL
+    g = chung_lu(cell["n"], cell["m"], seed=cell["seed"])
+    rows = []
+    warm_numpy: dict = {}
+    for backend in BACKENDS:
+        for algo in ALGORITHMS:
+            cold, warm, traces, r = _timed(
+                g, algo, backend, cell["block_edges"],
+                warm_repeats=TRAJECTORY_WARM_REPEATS)
+            if backend == "numpy":
+                warm_numpy[algo] = warm
+            rows.append({
+                "backend": backend,
+                "algorithm": algo,
+                "wall_seconds": round(warm, 4),
+                "wall_seconds_cold": round(cold, 4),
+                "jit_traces": traces,
+                "ratio_vs_numpy": round(warm / warm_numpy[algo], 3),
+                "speedup_vs_numpy": round(warm_numpy[algo] / warm, 3),
+                "iterations": r.iterations,
+                "num_shards": r.num_shards,
+            })
+            print(f"[traj] {backend:>6} {algo:<10} warm={warm:7.3f}s "
+                  f"cold={cold:7.3f}s traces={traces}")
+    return {
+        "device_count": len(jax.devices()),
+        "python": f"{sys.version_info[0]}.{sys.version_info[1]}",
+        "rows": rows,
+    }
+
+
+def _backend_aggregate(rows):
+    """{backend: (sum warm, sum numpy warm, sum traces)} over the algos."""
+    numpy_wall = {r["algorithm"]: r["wall_seconds"] for r in rows
+                  if r["backend"] == "numpy"}
+    agg: dict = {}
+    for r in rows:
+        w, nw, t = agg.get(r["backend"], (0.0, 0.0, 0))
+        agg[r["backend"]] = (w + r["wall_seconds"],
+                             nw + numpy_wall[r["algorithm"]],
+                             t + r["jit_traces"])
+    return agg
+
+
+def emit_trajectory() -> None:
+    """Measure and write/update this device count's baseline section in the
+    repo-root ``BENCH_backends.json`` (commit the result)."""
+    section = _measure_trajectory()
+    data = {"schema": 1, "cell": TRAJECTORY_CELL, "device_counts": {}}
+    if os.path.exists(TRAJECTORY_BASELINE):
+        with open(TRAJECTORY_BASELINE) as f:
+            data = json.load(f)
+    data["cell"] = TRAJECTORY_CELL
+    data.setdefault("device_counts", {})[str(section["device_count"])] = \
+        section
+    with open(TRAJECTORY_BASELINE, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    print(f"wrote {TRAJECTORY_BASELINE} "
+          f"(device_count={section['device_count']})")
+
+
+def check_trajectory() -> int:
+    """Measure fresh, write the candidate next to the other CI artifacts,
+    and gate against the committed baseline."""
+    section = _measure_trajectory()
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(TRAJECTORY_CURRENT, "w") as f:
+        json.dump({"schema": 1, "cell": TRAJECTORY_CELL,
+                   "device_counts": {str(section["device_count"]): section}},
+                  f, indent=2)
+        f.write("\n")
+    if not os.path.exists(TRAJECTORY_BASELINE):
+        print("WARN: no committed BENCH_backends.json baseline; "
+              "run --emit-trajectory and commit it", file=sys.stderr)
+        return 0
+    with open(TRAJECTORY_BASELINE) as f:
+        baseline = json.load(f)
+    base = baseline.get("device_counts", {}).get(
+        str(section["device_count"]))
+    if base is None:
+        print(f"WARN: baseline has no section for device_count="
+              f"{section['device_count']}; skipping the gate",
+              file=sys.stderr)
+        return 0
+    cand_agg = _backend_aggregate(section["rows"])
+    base_agg = _backend_aggregate(base["rows"])
+    failures = []
+    for backend, (w, nw, traces) in sorted(cand_agg.items()):
+        if backend not in base_agg:
+            continue
+        bw, bnw, btraces = base_agg[backend]
+        if traces > btraces:
+            failures.append(
+                f"{backend}: jit traces grew {btraces} -> {traces} "
+                "(O(passes)-retrace regression)")
+        if backend == "numpy":
+            continue  # numpy is the normalizer
+        ratio = w / max(nw, 1e-9)
+        base_ratio = bw / max(bnw, 1e-9)
+        limit = TRAJECTORY_WALL_BAND * base_ratio + TRAJECTORY_RATIO_FLOOR
+        status = "ok" if ratio <= limit else "FAIL"
+        print(f"[gate] {backend:>6} warm-vs-numpy ratio {ratio:6.2f} "
+              f"(baseline {base_ratio:6.2f}, limit {limit:6.2f}) {status}")
+        if ratio > limit:
+            failures.append(
+                f"{backend}: warm-wall ratio {ratio:.2f} exceeds "
+                f"{TRAJECTORY_WALL_BAND}x baseline {base_ratio:.2f} + "
+                f"{TRAJECTORY_RATIO_FLOOR}")
+    if failures:
+        print("perf-trajectory gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("perf-trajectory gate OK "
+          f"(device_count={section['device_count']})")
+    return 0
+
+
+def summary() -> None:
+    """Render the backend × algorithm wall-clock table as GitHub-flavored
+    markdown (for $GITHUB_STEP_SUMMARY) from the freshest trajectory file."""
+    path = TRAJECTORY_CURRENT if os.path.exists(TRAJECTORY_CURRENT) \
+        else TRAJECTORY_BASELINE
+    if not os.path.exists(path):
+        print("(no trajectory data)")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    for dc, section in sorted(data.get("device_counts", {}).items()):
+        cell = data.get("cell", {})
+        print(f"### Backend × algorithm warm wall-clock "
+              f"({dc} device(s), python {section.get('python', '?')}, "
+              f"n={cell.get('n', '?')} cell)\n")
+        print("| backend | " + " | ".join(ALGORITHMS) +
+              " | jit traces | speedup vs numpy |")
+        print("|---|" + "---|" * (len(ALGORITHMS) + 2))
+        by_backend: dict = {}
+        for r in section["rows"]:
+            by_backend.setdefault(r["backend"], {})[r["algorithm"]] = r
+        numpy_total = sum(r["wall_seconds"]
+                          for r in by_backend.get("numpy", {}).values())
+        for backend in BACKENDS:
+            rows = by_backend.get(backend)
+            if not rows:
+                continue
+            walls = " | ".join(
+                f"{rows[a]['wall_seconds']:.3f}s" if a in rows else "-"
+                for a in ALGORITHMS)
+            traces = sum(r["jit_traces"] for r in rows.values())
+            total_w = sum(r["wall_seconds"] for r in rows.values())
+            speed = numpy_total / max(total_w, 1e-9)
+            print(f"| {backend} | {walls} | {traces} | {speed:.2f}x |")
+        print()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small graphs, skip the large cell")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: REPRO_BACKEND env decides the backend")
+    ap.add_argument("--emit-trajectory", action="store_true",
+                    help="refresh this device count's committed baseline "
+                    "section in BENCH_backends.json")
+    ap.add_argument("--check-trajectory", action="store_true",
+                    help="CI gate: fail on warm-wall or jit-trace regression "
+                    "vs the committed baseline")
+    ap.add_argument("--summary", action="store_true",
+                    help="markdown wall-clock table (for "
+                    "$GITHUB_STEP_SUMMARY)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+        return
+    if args.emit_trajectory:
+        emit_trajectory()
+        return
+    if args.check_trajectory:
+        raise SystemExit(check_trajectory())
+    if args.summary:
+        summary()
         return
 
     n, m = (800, 3200) if args.quick else (4000, 16000)
@@ -158,12 +361,14 @@ def main() -> None:
         # >= 200k directed edges: the interpret-mode pallas kernels pay a
         # Python-free but still emulated per-block cost, so the large cell
         # compares the host reference against the device-resident xla loop
+        # and the on-mesh shard loop
         gl = chung_lu(25_000, 110_000, seed=8)
         assert gl.num_directed >= 200_000
         result["large"] = {
             "graph": {"n": gl.n, "m": gl.m, "block_edges": 4096,
                       "num_blocks": -(-gl.num_directed // 4096)},
-            "runs": _bench_graph(gl, 4096, ("numpy", "xla"), "large"),
+            "runs": _bench_graph(gl, 4096, ("numpy", "xla", "shard"),
+                                 "large"),
         }
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "backends.json")

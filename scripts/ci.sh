@@ -1,6 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 CI: dev deps (best effort — hermetic images fall back to the
 # repro.compat hypothesis stub), full test suite, streaming bench smoke.
+#
+# The workflow matrix (.github/workflows/ci.yml) runs this leg at
+# python {3.10, 3.12} x device-count {1, 8}; the 8-device legs export
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 so the shard backend
+# (engine.ShardedBackend, DESIGN.md §13) exercises a real 8-way mesh on the
+# CPU runner end to end — pytest sweep, backend smoke, and trajectory gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,10 +16,10 @@ python -m pip install -q -r requirements-dev.txt \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 # backend-matrix smoke: the same batch superstep on every compute substrate
-# (engine.py, DESIGN.md §11), selected through the REPRO_BACKEND env default.
-# The xla leg also gates device-resident wall-clock against numpy (a loose
-# multiple; see bench_backends.smoke) so a host-loop regression fails CI.
-for backend in numpy xla pallas; do
+# (engine.py, DESIGN.md §11/§13), selected through the REPRO_BACKEND env
+# default.  Exactness + trace parity only; wall-clock is gated below by the
+# perf-trajectory harness.
+for backend in numpy xla pallas shard; do
   REPRO_BACKEND=$backend PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_backends.py --smoke
 done
@@ -23,6 +29,22 @@ done
 REPRO_DEVICE_RESIDENT=0 REPRO_BACKEND=xla \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/bench_backends.py --smoke
+
+# perf-trajectory regression gate: measure the 4-backend matrix and compare
+# warm-wall ratios + jit-trace counts against the committed
+# BENCH_backends.json baseline (fails on >1.5x warm-wall regression or any
+# jit-trace-count increase; replaces the old "xla <= 40x numpy + 2s" hack).
+# The candidate lands in benchmarks/results/BENCH_backends_current.json for
+# the artifact upload.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_backends.py --check-trajectory
+
+# CI observability: render the backend x algorithm wall-clock table into the
+# workflow step summary (no-op outside GitHub Actions)
+if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_backends.py --summary >> "$GITHUB_STEP_SUMMARY"
+fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
 

@@ -120,7 +120,14 @@ class CoreGraphConfig:
     pool_blocks: int = 1         # BlockReader LRU pool; 1 = paper's single buffer
     build_chunk_edges: int = 1 << 22  # out-of-core build ingest chunk (build.py)
     backend: str = "numpy"       # batch-schedule compute backend (engine.py §11):
-                                 # numpy | xla | pallas
+                                 # numpy | xla | pallas | shard
+    num_shards: int | None = None  # mesh width for backend="shard"
+                                 # (engine.ShardedBackend, DESIGN.md §13):
+                                 # contiguous edge shards minimax-balanced by
+                                 # edge count, replicated O(n) core, one
+                                 # all_gather of owned slices per superstep.
+                                 # None = every visible device;
+                                 # REPRO_NUM_SHARDS overrides the default.
     superstep_chunk: int = 8     # device-resident passes per host round-trip
                                  # (resident.py §12) — threaded through
                                  # decompose / CoreMaintainer / CoreService

@@ -44,4 +44,15 @@ TWITTER_PALLAS = CoreGraphConfig(name="semicore-twitter-pallas",
                                  max_deg=2_997_487, block_edges=4096,
                                  pool_blocks=1, build_chunk_edges=1 << 24,
                                  backend="pallas", superstep_chunk=4)
+# Sharded-backend variant: the Clueweb cell on a 256-chip mesh
+# (engine.ShardedBackend, DESIGN.md §13).  Per-device: ~333M int32 edge-shard
+# slots (1.3 GB, minimax-balanced so padding stays ~0) + the replicated
+# 978M x 4 B core array = 3.9 GB — the paper's "< 4.2 GB" bound per chip.
+# One all_gather of the owned core slices (n x 4 B over ICI) per superstep.
+CLUEWEB_SHARD = CoreGraphConfig(name="semicore-clueweb-shard",
+                                n=978_408_098, m_directed=85_148_214_938,
+                                max_deg=75_611_696, block_edges=4096,
+                                pool_blocks=1, build_chunk_edges=1 << 24,
+                                backend="shard", num_shards=256,
+                                superstep_chunk=8)
 CONFIG = CLUEWEB

@@ -1,6 +1,6 @@
-"""SPMD semi-external core decomposition over a TPU mesh (DESIGN.md §2, §5).
+"""Sharded graph layout for the mesh backend (DESIGN.md §5, §13).
 
-The paper's memory contract maps onto the pod as:
+The paper's memory contract maps onto a device mesh as:
 
   * edge table  -> per-device CSR shards of *contiguous node ranges* balanced
     by edge count (the paper's sequential adjacency layout, so every owned
@@ -12,100 +12,180 @@ The paper's memory contract maps onto the pod as:
     (Jacobi), then an ``all_gather`` of the owned slices (O(n) over ICI,
     the read-only-I/O discipline: edge shards never move).
 
-LocalCore (Eq. 1) is evaluated as a vectorized *binary search* over k with a
-segment-sum count per probe (log2(max_deg) probes/superstep), optionally gated
-by the SemiCore* cnt rule (cnt(v) < core(v), Lemma 4.2), which is computed
-locally for owned nodes (one extra segment-sum) since ``core`` is replicated.
+This module is the *layout* half of that contract: :func:`shard_arrays` cuts
+a flat CSR into stacked per-shard arrays (minimax-balanced contiguous ranges,
+int32-validated like ``resident.build_structure``), :func:`shard_graph` wraps
+it for a plain :class:`CSRGraph`, and :func:`sharded_graph_specs` produces
+the matching ShapeDtypeStructs for the dry-run cost-analysis path.
 
-Convergence from above is schedule-free (Thm 4.1 locality), so Jacobi
-supersteps reach the same fixpoint as the paper's sequential passes; any
-intermediate ``core`` is a valid warm restart (free crash consistency).
+The *execution* half lives in the engine since the shard ComputeBackend
+landed (DESIGN.md §13): :class:`repro.core.engine.ShardedBackend` binds a
+:class:`~repro.core.resident.ShardedStructure` built from these arrays and
+runs the whole fixpoint on-mesh through the shared fused superstep bodies
+(``resident.fused_hindex`` / ``fused_counts``), pass-for-pass identical to
+the numpy backend.  :func:`distributed_decompose` is kept as a thin wrapper
+over that backend — its old private superstep builders are gone.
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass
-from functools import partial
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from ..compat.jaxshims import shard_map
 
 from ..graph.storage import CSRGraph
-from .engine import hindex_bucketed
-from .resident import fused_counts, fused_hindex
 
-__all__ = ["ShardedGraph", "shard_graph", "sharded_graph_specs", "distributed_decompose"]
+__all__ = [
+    "ShardedGraph",
+    "shard_arrays",
+    "shard_graph",
+    "balanced_bounds",
+    "sharded_graph_specs",
+    "distributed_decompose",
+]
 
 
 @dataclass
 class ShardedGraph:
-    """Stacked per-shard CSR arrays (leading dim = number of shards)."""
+    """Stacked per-shard CSR arrays (leading dim = number of shards).
+
+    ``lsegptr`` holds each shard's *local* CSR offsets over its padded edge
+    axis (empty segments for padding slots), so the on-mesh superstep can run
+    its segment reductions as sorted prefix sums instead of scatters.
+    ``pad_edges`` / ``per_shard_edges`` surface the padding cost of the
+    rectangular (S, E) layout; the minimax balance below keeps it minimal
+    for contiguous ranges.
+    """
 
     dst: np.ndarray        # (S, E) int32  — edge targets, padded
     rows: np.ndarray       # (S, E) int32  — local owner-row per edge
     edge_mask: np.ndarray  # (S, E) bool
     owned_ids: np.ndarray  # (S, V) int32  — global node id per local slot (pad -> n)
     owned_mask: np.ndarray # (S, V) bool
+    lsegptr: np.ndarray    # (S, V+1) int32 — local flat-table offsets
+    bounds: np.ndarray     # (S+1,) int64  — contiguous node-range cuts
     deg: np.ndarray        # (n,)  int32   — global degrees (core init)
     n: int
-    num_probes: int        # binary-search probes = ceil(log2(max_deg + 1))
+    num_probes: int        # binary-search probes = ceil(log2(max_deg + 2))
+    pad_edges: int         # S * E - total directed edges (wasted slots)
+    per_shard_edges: np.ndarray  # (S,) int64 — real edges per shard
 
     def device_arrays(self) -> dict:
         return dict(
             dst=self.dst, rows=self.rows, edge_mask=self.edge_mask,
             owned_ids=self.owned_ids, owned_mask=self.owned_mask,
+            lsegptr=self.lsegptr,
         )
 
 
-def shard_graph(graph: CSRGraph, num_shards: int) -> ShardedGraph:
-    """Contiguous node-range shards balanced by (directed) edge count."""
-    n = graph.n
-    indptr = graph.indptr
-    total = graph.num_directed
-    # balanced contiguous ranges: node v goes to shard indptr[v] * S / total
-    cuts = np.searchsorted(indptr[1:], np.arange(1, num_shards) * total / num_shards)
-    bounds = np.concatenate([[0], cuts, [n]]).astype(np.int64)
-    max_nodes = int(max(1, (np.diff(bounds)).max()))
-    max_edges = int(
-        max(1, (indptr[bounds[1:]] - indptr[bounds[:-1]]).max())
-    )
-    S = num_shards
+def _validate_int32(total_edges: int, n: int) -> None:
+    """The device shard tables are int32 end-to-end (ids, rows, local
+    offsets; jax x64 is off) — fail loudly instead of wrapping offsets
+    negative and converging to a silently-wrong core array (the same
+    guard ``resident.build_structure`` applies to the flat table)."""
+    if total_edges >= (1 << 31) or n >= (1 << 31):
+        raise ValueError(
+            f"sharded edge table needs int32 offsets: 2m={total_edges} "
+            f"n={n} exceeds 2**31; raise num_shards only splits the edge "
+            "axis, not the id space — use the numpy backend for this graph")
+
+
+def balanced_bounds(seg_ptr: np.ndarray, num_shards: int) -> np.ndarray:
+    """Contiguous node-range cuts minimizing the max per-shard edge count.
+
+    The rectangular (S, E) device layout pads every shard to the heaviest
+    shard's edge count, so the balance objective is *minimax*, not
+    mean-squared: binary-search the smallest feasible load L, with greedy
+    feasibility via ``searchsorted`` (each range takes the longest prefix
+    fitting in L; a node's adjacency never splits, and L >= max degree
+    guarantees progress).  O(S log n log m).
+    """
+    n = len(seg_ptr) - 1
+    S = max(1, int(num_shards))
+    total = int(seg_ptr[-1])
+    if n == 0:
+        return np.zeros(S + 1, dtype=np.int64)
+    deg = np.diff(seg_ptr)
+    lo = max(int(deg.max()) if n else 0, -(-total // S))
+    hi = total
+
+    def cuts(L):
+        bounds = np.empty(S + 1, dtype=np.int64)
+        bounds[0] = 0
+        cur = 0
+        for s in range(S):
+            if cur >= n:
+                bounds[s + 1] = n
+                continue
+            nxt = int(np.searchsorted(seg_ptr, seg_ptr[cur] + L,
+                                      side="right")) - 1
+            bounds[s + 1] = cur = max(min(nxt, n), cur + 1)
+        return bounds if bounds[-1] >= n else None
+
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cuts(mid) is not None:
+            hi = mid
+        else:
+            lo = mid + 1
+    return cuts(lo)
+
+
+def shard_arrays(adj: np.ndarray, seg_ptr: np.ndarray, num_shards: int,
+                 n: int | None = None) -> ShardedGraph:
+    """Cut a flat CSR (``adj`` targets, ``seg_ptr`` offsets) into stacked
+    per-shard arrays over minimax-balanced contiguous node ranges."""
+    n = len(seg_ptr) - 1 if n is None else int(n)
+    seg_ptr = np.asarray(seg_ptr, dtype=np.int64)
+    total = int(seg_ptr[-1])
+    _validate_int32(total, n)
+    S = max(1, int(num_shards))
+    bounds = balanced_bounds(seg_ptr, S)
+    per_shard = (seg_ptr[bounds[1:]] - seg_ptr[bounds[:-1]]).astype(np.int64)
+    max_nodes = int(max(1, np.diff(bounds).max() if n else 1))
+    max_edges = int(max(1, per_shard.max()))
     dst = np.zeros((S, max_edges), dtype=np.int32)
     rows = np.zeros((S, max_edges), dtype=np.int32)
     emask = np.zeros((S, max_edges), dtype=bool)
     owned = np.full((S, max_nodes), n, dtype=np.int32)
     omask = np.zeros((S, max_nodes), dtype=bool)
+    lseg = np.zeros((S, max_nodes + 1), dtype=np.int32)
     for s in range(S):
-        lo, hi = bounds[s], bounds[s + 1]
-        e0, e1 = int(indptr[lo]), int(indptr[hi])
-        ne, nv = e1 - e0, int(hi - lo)
-        dst[s, :ne] = graph.adj[e0:e1]
-        local_deg = np.diff(indptr[lo : hi + 1]).astype(np.int64)
+        lo_v, hi_v = int(bounds[s]), int(bounds[s + 1])
+        e0, e1 = int(seg_ptr[lo_v]), int(seg_ptr[hi_v])
+        ne, nv = e1 - e0, hi_v - lo_v
+        dst[s, :ne] = adj[e0:e1]
+        local_deg = np.diff(seg_ptr[lo_v: hi_v + 1]).astype(np.int64)
         rows[s, :ne] = np.repeat(np.arange(nv, dtype=np.int32), local_deg)
         emask[s, :ne] = True
-        owned[s, :nv] = np.arange(lo, hi, dtype=np.int32)
+        owned[s, :nv] = np.arange(lo_v, hi_v, dtype=np.int32)
         omask[s, :nv] = True
-    deg = graph.degrees().astype(np.int32)
-    # core(v) <= ceil(sqrt(2m)) always (a k-core needs k+1 nodes of degree
-    # >= k), so the degree init can be capped: fewer binary-search probes
-    # and faster convergence for skewed graphs (EXPERIMENTS §Perf).
-    kbound = int(np.sqrt(graph.num_directed)) + 1
-    deg = np.minimum(deg, kbound).astype(np.int32)
+        lseg[s, : nv + 1] = (seg_ptr[lo_v: hi_v + 1] - e0).astype(np.int32)
+        lseg[s, nv + 1:] = ne  # padding slots: empty trailing segments
+    deg = np.diff(seg_ptr).astype(np.int32)
     dmax = int(deg.max()) if n else 0
     return ShardedGraph(
-        dst=dst, rows=rows, edge_mask=emask, owned_ids=owned, owned_mask=omask,
-        deg=deg, n=n, num_probes=max(1, int(np.ceil(np.log2(dmax + 2)))),
+        dst=dst, rows=rows, edge_mask=emask, owned_ids=owned,
+        owned_mask=omask, lsegptr=lseg, bounds=bounds, deg=deg, n=n,
+        num_probes=max(1, int(np.ceil(np.log2(dmax + 2)))),
+        pad_edges=S * max_edges - total, per_shard_edges=per_shard,
     )
+
+
+def shard_graph(graph: CSRGraph, num_shards: int) -> ShardedGraph:
+    """Contiguous node-range shards of a plain CSR, balanced by edge count."""
+    return shard_arrays(np.asarray(graph.adj), graph.indptr, num_shards,
+                        n=graph.n)
 
 
 def sharded_graph_specs(
     n: int, m_directed: int, num_shards: int, max_deg: int
 ) -> tuple[dict, int, int]:
-    """ShapeDtypeStructs for a graph of the given scale (dry-run path)."""
+    """ShapeDtypeStructs matching the shard chunk-fn signature (dry-run path:
+    ``resident.build_shard_chunk_fn``)."""
+    import jax.numpy as jnp
+
     V = -(-n // num_shards) + 1
     E = int(m_directed / num_shards * 1.05) + 8  # balanced-cut slack
     S = num_shards
@@ -114,223 +194,52 @@ def sharded_graph_specs(
         dst=sds((S, E), jnp.int32),
         rows=sds((S, E), jnp.int32),
         edge_mask=sds((S, E), jnp.bool_),
+        lsegptr=sds((S, V + 1), jnp.int32),
         owned_ids=sds((S, V), jnp.int32),
         owned_mask=sds((S, V), jnp.bool_),
+        cnt=sds((S, V), jnp.int32),
+        active=sds((S, V), jnp.bool_),
+        nactive=sds((), jnp.int32),
     )
-    kbound = int(np.sqrt(m_directed)) + 1
-    probes = max(1, int(np.ceil(np.log2(min(max_deg, kbound) + 2))))
+    probes = max(1, int(np.ceil(np.log2(max_deg + 2))))
     return specs, probes, V
-
-
-# ---------------------------------------------------------------------------
-# device-local superstep pieces (run per shard inside shard_map).  The actual
-# gather + count / h-index math is the shared *fused* superstep code in
-# core/resident.py — the same body the device-resident host engine scans its
-# full table with — applied to the shard's local edge arrays.
-# ---------------------------------------------------------------------------
-def _xla_segment_sum(vals, rows, num_segments):
-    return jax.ops.segment_sum(vals, rows, num_segments=num_segments)
-
-
-def _local_counts(core, dst, rows, edge_mask, thresholds, num_rows):
-    """#{local edges (v,u) : core[u] >= thresholds[row(v)]} per owned row."""
-    return fused_counts(core, dst, rows, edge_mask, thresholds, num_rows,
-                        segment_sum_fn=_xla_segment_sum)
-
-
-def _local_hindex(core, dst, rows, edge_mask, c_old, num_probes):
-    """Vectorized binary search for h = max k <= c_old with count_ge(k) >= k.
-
-    REPRO_UNROLL_SCANS=1 unrolls the probes so cost analysis sees every scan
-    (launch/dryrun.py sets it at trace time).
-    """
-    return fused_hindex(
-        core, dst, rows, edge_mask, c_old, num_probes,
-        segment_sum_fn=_xla_segment_sum,
-        unroll=os.environ.get("REPRO_UNROLL_SCANS") == "1")
-
-
-def build_decompose_fn(
-    mesh: Mesh,
-    n: int,
-    num_probes: int,
-    star_gating: bool = True,
-    max_supersteps: int = 10_000,
-    optimized: bool = True,
-    gather_dtype=None,
-    method: str = "bsearch",
-):
-    """jit'd distributed decomposition: (core0, shard arrays) -> (core, iters).
-
-    Shards ride the flattened mesh (every axis), core is replicated.
-
-    ``optimized`` (beyond-paper, EXPERIMENTS §Perf): hoists the (static)
-    owned-id all-gather out of the superstep loop — the per-superstep ICI
-    traffic drops from 2 x n x 4 B to n x |gather_dtype| B — and allows a
-    compact ``gather_dtype`` (int16 when the initial upper bound fits).
-    """
-    axes = tuple(mesh.axis_names)
-    shard_spec = P(axes)  # leading dim split over all axes jointly
-    repl = P()
-    gdt = gather_dtype or jnp.int32
-
-    def whole(core0, dst, rows, edge_mask, owned_ids, owned_mask):
-        dst = dst[0]; rows = rows[0]; edge_mask = edge_mask[0]
-        owned_ids = owned_ids[0]; owned_mask = owned_mask[0]
-        num_rows = owned_ids.shape[0]
-        if optimized:
-            # static scatter index: gathered ONCE, not every superstep
-            owned_flat = jax.lax.all_gather(owned_ids, axes, tiled=True)
-
-        def superstep(core):
-            c_old = jnp.where(owned_mask, jnp.take(core, owned_ids, mode="clip"), 0)
-            if star_gating:
-                # SemiCore* rule (Lemma 4.2): recompute only if cnt < core.
-                cnt = _local_counts(core, dst, rows, edge_mask, c_old, num_rows)
-                frontier = (cnt < c_old) & owned_mask
-            else:
-                frontier = owned_mask
-            if method == "bucket":
-                h = _local_hindex_bucketed(core, dst, rows, edge_mask, c_old,
-                                           owned_mask)
-            else:
-                h = _local_hindex(core, dst, rows, edge_mask, c_old, num_probes)
-            c_new = jnp.where(frontier, jnp.minimum(h, c_old), c_old)
-            changed = jax.lax.psum(
-                jnp.sum((c_new != c_old).astype(jnp.int32)), axes)
-            if optimized:
-                gathered = jax.lax.all_gather(
-                    c_new.astype(gdt), axes, tiled=True).astype(core.dtype)
-                ids = owned_flat
-            else:  # paper-faithful baseline combine (ids re-gathered)
-                gathered = jax.lax.all_gather(c_new, axes, tiled=True)
-                ids = jax.lax.all_gather(owned_ids, axes, tiled=True)
-            new_core = jnp.zeros((n + 1,), core.dtype).at[ids].set(gathered)
-            return new_core[:n], changed
-
-        def cond(state):
-            _, changed, it = state
-            return (changed > 0) & (it < max_supersteps)
-
-        def body(state):
-            core, _, it = state
-            core, changed = superstep(core)
-            return core, changed, it + 1
-
-        core, _, iters = jax.lax.while_loop(
-            cond, body, (core0, jnp.int32(1), jnp.int32(0)))
-        return core, iters
-
-    sharded = shard_map(
-        whole,
-        mesh=mesh,
-        in_specs=(repl, shard_spec, shard_spec, shard_spec, shard_spec, shard_spec),
-        out_specs=(repl, repl),
-        check_vma=False,
-    )
-    in_shardings = tuple(
-        NamedSharding(mesh, s)
-        for s in (repl, shard_spec, shard_spec, shard_spec, shard_spec, shard_spec)
-    )
-    return jax.jit(
-        sharded,
-        in_shardings=in_shardings,
-        out_shardings=NamedSharding(mesh, repl),
-    )
-
-
-def _local_hindex_bucketed(core, dst, rows, edge_mask, c_old, owned_mask):
-    """Single-pass h-index (O(E + V) per superstep): the shared
-    engine.hindex_bucketed op over the shard's gathered neighbor cores —
-    the §Perf memory-term optimization."""
-    return hindex_bucketed(
-        jnp.take(core, dst, mode="clip"), rows, edge_mask, c_old, owned_mask)
-
-
-def build_superstep_fn(
-    mesh: Mesh,
-    n: int,
-    num_probes: int,
-    star_gating: bool = True,
-    optimized: bool = True,
-    gather_dtype=None,
-    method: str = "bsearch",
-):
-    """One superstep as its own jit — the §Perf measurement unit (its HLO
-    contains exactly the per-superstep collectives, no while-body ambiguity).
-
-    ``optimized`` superstep takes the static gathered id map as an *input*
-    (hoisted out of the iteration); baseline re-gathers ids every superstep.
-    """
-    axes = tuple(mesh.axis_names)
-    shard_spec = P(axes)
-    repl = P()
-    gdt = gather_dtype or jnp.int32
-
-    def one(core, dst, rows, edge_mask, owned_ids, owned_mask, owned_flat):
-        dst = dst[0]; rows = rows[0]; edge_mask = edge_mask[0]
-        owned_ids = owned_ids[0]; owned_mask = owned_mask[0]
-        num_rows = owned_ids.shape[0]
-        c_old = jnp.where(owned_mask, jnp.take(core, owned_ids, mode="clip"), 0)
-        if star_gating:
-            cnt = _local_counts(core, dst, rows, edge_mask, c_old, num_rows)
-            frontier = (cnt < c_old) & owned_mask
-        else:
-            frontier = owned_mask
-        if method == "bucket":
-            h = _local_hindex_bucketed(core, dst, rows, edge_mask, c_old,
-                                       owned_mask)
-        else:
-            h = _local_hindex(core, dst, rows, edge_mask, c_old, num_probes)
-        c_new = jnp.where(frontier, jnp.minimum(h, c_old), c_old)
-        changed = jax.lax.psum(jnp.sum((c_new != c_old).astype(jnp.int32)), axes)
-        if optimized:
-            gathered = jax.lax.all_gather(
-                c_new.astype(gdt), axes, tiled=True).astype(core.dtype)
-            ids = owned_flat
-        else:
-            gathered = jax.lax.all_gather(c_new, axes, tiled=True)
-            ids = jax.lax.all_gather(owned_ids, axes, tiled=True)
-        new_core = jnp.zeros((n + 1,), core.dtype).at[ids].set(gathered)
-        return new_core[:n], changed
-
-    sharded = shard_map(
-        one, mesh=mesh,
-        in_specs=(repl, shard_spec, shard_spec, shard_spec, shard_spec,
-                  shard_spec, repl),
-        out_specs=(repl, repl),
-        check_vma=False,
-    )
-    shardings = tuple(NamedSharding(mesh, s) for s in
-                      (repl, shard_spec, shard_spec, shard_spec, shard_spec,
-                       shard_spec, repl))
-    return jax.jit(sharded, in_shardings=shardings,
-                   out_shardings=NamedSharding(mesh, repl))
 
 
 def distributed_decompose(
     graph: CSRGraph,
-    mesh: Mesh | None = None,
+    mesh=None,
     star_gating: bool = True,
     core0: np.ndarray | None = None,
-    method: str = "bsearch",
+    max_supersteps: int | None = None,
 ):
-    """Host entry point: shard, run to convergence, return (core, supersteps).
+    """Thin wrapper over the ``shard`` ComputeBackend (DESIGN.md §13):
+    shard, run the on-mesh fixpoint, return (core, supersteps).
 
     With ``core0`` given (e.g. a checkpointed intermediate state or the
-    post-deletion upper bounds), performs a warm restart — monotone
-    convergence makes any upper-bound state a valid init (fault tolerance).
+    post-deletion upper bounds), performs a warm restart: monotone
+    convergence makes any upper-bound state a valid init, and the exact-cnt
+    prologue (the warm-settle discipline) re-derives cnt on the mesh.
+    ``max_supersteps`` budgets the run exactly — the returned core is then
+    a valid upper-bound checkpoint rather than the fixpoint.
     """
-    if mesh is None:
-        dev = np.array(jax.devices())
-        mesh = Mesh(dev.reshape(len(dev)), ("shard",))
-    S = int(np.prod(mesh.devices.shape))
-    sg = shard_graph(graph, S)
-    fn = build_decompose_fn(mesh, sg.n, sg.num_probes, star_gating,
-                            method=method)
-    init = sg.deg if core0 is None else np.asarray(core0, dtype=np.int32)
-    core, iters = fn(
-        jnp.asarray(init, dtype=jnp.int32),
-        sg.dst, sg.rows, sg.edge_mask, sg.owned_ids, sg.owned_mask,
-    )
-    return np.asarray(core), int(iters)
+    from .engine import ShardedBackend
+    from .resident import run_resident
+    from .semicore import HostEngine
+
+    if mesh is not None:
+        devices = list(mesh.devices.flat)  # honor the caller's device pick
+        S = len(devices)
+    else:
+        devices = None
+        S = len(jax.devices())
+    backend = ShardedBackend(num_shards=S, devices=devices)
+    eng = HostEngine(graph)
+    if core0 is not None:
+        warm = np.minimum(np.asarray(core0, dtype=np.int64),
+                          eng.degrees()).astype(np.int64)
+        r = run_resident(eng, "semicore*", backend, core=warm,
+                         initial_cnt_scan=True, max_supersteps=max_supersteps)
+    else:
+        algo = "semicore*" if star_gating else "semicore"
+        r = run_resident(eng, algo, backend, max_supersteps=max_supersteps)
+    return np.asarray(r.core), int(r.iterations)

@@ -21,12 +21,14 @@ blocks — and this module is its single implementation (DESIGN.md §11):
 
 * Backends: :class:`NumpyBackend` (the vectorized host reference from
   ``localcore.py``), :class:`XLABackend` (jit'd binary-search h-index over
-  ``jax.ops.segment_sum`` — the same shared ops the SPMD engine in
-  ``distributed.py`` consumes), and :class:`PallasBackend` (h-index probes
+  ``jax.ops.segment_sum``), :class:`PallasBackend` (h-index probes
   through ``kernels.ops.segment_sum_active``: the frontier-derived
   block-activity mask skips the DMA of untouched edge blocks, the paper's
   I/O saving expressed at the HBM->VMEM level; skipped blocks are reported
-  alongside ``edge_block_reads``).
+  alongside ``edge_block_reads``), and :class:`ShardedBackend` (the mesh
+  substrate, DESIGN.md §13: per-device contiguous edge shards, replicated
+  O(n) core, one ``all_gather`` of owned slices per superstep — the whole
+  fixpoint runs on-mesh through ``resident.run_sharded``).
 
 ``push_decrements`` deliberately has a host-side default: cnt is O(n) node
 state held *in memory* in the paper's model, and the push rule only touches
@@ -50,6 +52,7 @@ __all__ = [
     "NumpyBackend",
     "XLABackend",
     "PallasBackend",
+    "ShardedBackend",
     "resolve_backend",
     "run_batch",
     "warm_settle",
@@ -80,6 +83,11 @@ class DecompResult:
     # blocks issue no HBM->VMEM DMA (segsum_active.py).
     kernel_blocks_active: int = 0
     kernel_blocks_skipped: int = 0
+    # Shard backend only (DESIGN.md §13): mesh width and the padding cost of
+    # the rectangular (S, E) shard layout (slots wasted by balancing all
+    # shards to the heaviest one's edge count).
+    num_shards: int = 0
+    shard_pad_edges: int = 0
 
     @property
     def kmax(self) -> int:
@@ -615,6 +623,77 @@ class PallasBackend(DeviceBackend):
         return np.asarray(cnt).astype(np.int64)[self._frontier]
 
 
+class ShardedBackend(DeviceBackend):
+    """The mesh substrate: the paper's semi-external contract on a device
+    mesh (DESIGN.md §5, §13).
+
+    Edge shards never move: :func:`~repro.core.distributed.shard_arrays`
+    cuts the merged flat table into contiguous node ranges minimax-balanced
+    by edge count, so every owned node's complete adjacency is local and the
+    h-index / cnt arithmetic needs no cross-device reduction.  Node state
+    (``core``) is replicated O(n) per device — the "< 4.2 GB" headline bound.
+    The whole fixpoint runs on-mesh (``resident.run_sharded``): one
+    ``shard_map``'d fused superstep per pass (the same
+    ``resident.fused_hindex`` / ``fused_counts`` bodies the flat resident
+    path scans), ``lax.scan`` chunks of cond-gated passes per host
+    round-trip, and a *single* ``all_gather`` of the owned core slices per
+    superstep (plus one scalar ``psum`` for convergence).  The planner's I/O
+    trace is replayed bit-identically on host from the per-chunk pinned
+    owned-frontier slices, so the shard backend walks the exact numpy
+    passes — the differential sweep asserts it at every shard count.
+
+    The bound :class:`~repro.core.resident.ShardedStructure` is cached per
+    base-CSR version exactly like the flat resident table: a long-lived
+    ``CoreMaintainer`` re-binding after a no-op batch re-shards nothing.
+
+    ``num_shards=None`` uses every visible device; the mesh spans
+    ``jax.devices()[:num_shards]`` (``REPRO_NUM_SHARDS`` /
+    ``CoreGraphConfig.num_shards`` select it by env / config).  There is no
+    per-pass host fallback: the shard backend is resident-only
+    (``REPRO_DEVICE_RESIDENT=0`` does not apply).
+    """
+
+    name = "shard"
+    consumes_gather = False
+    mesh_sharded = True      # run_resident dispatches to run_sharded
+    requires_resident = True  # no per-pass legacy loop exists for this one
+
+    def __init__(self, num_shards: int | None = None, devices=None):
+        super().__init__()
+        self.num_shards = None if num_shards is None else int(num_shards)
+        # explicit device list (e.g. from a caller's Mesh): the mesh is
+        # built over exactly these, letting multi-tenant hosts pin the run
+        # to a device subset instead of always taking jax.devices()[:S]
+        self.devices = None if devices is None else list(devices)
+
+    def resolve_shards(self) -> int:
+        import jax
+
+        avail = len(self.devices if self.devices is not None
+                    else jax.devices())
+        S = avail if self.num_shards is None else self.num_shards
+        if not 1 <= S <= avail:
+            raise ValueError(
+                f"shard backend: num_shards={S} but only {avail} device(s) "
+                "are visible; force host devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N or "
+                "lower CoreGraphConfig.num_shards / REPRO_NUM_SHARDS")
+        return S
+
+    def bind_resident(self, planner: "PassPlanner"):
+        from .resident import build_sharded_structure
+
+        planner.eng._sync()
+        S = self.resolve_shards()
+        rs = self._resident
+        if rs is not None and rs.S == S and rs.matches(planner):
+            return rs
+        rs = build_sharded_structure(planner, S, devices=self.devices)
+        self.structure_builds += 1
+        self._resident = rs
+        return rs
+
+
 def resolve_backend(backend) -> ComputeBackend:
     """Backend instance passthrough, or by name; ``None`` defers to the
     ``REPRO_BACKEND`` environment variable (default: numpy)."""
@@ -631,6 +710,9 @@ def resolve_backend(backend) -> ComputeBackend:
         return PallasBackend()
     if name == "pallas-interpret":
         return PallasBackend(interpret=True)
+    if name == "shard":
+        ns = os.environ.get("REPRO_NUM_SHARDS")
+        return ShardedBackend(num_shards=int(ns) if ns else None)
     raise ValueError(f"unknown compute backend {backend!r}")
 
 
@@ -813,7 +895,7 @@ def run_batch(engine, algorithm: str, backend=None, *,
     if backend.device_resident and rebind:
         from .resident import resident_enabled, run_resident
 
-        if resident_enabled():
+        if resident_enabled() or getattr(backend, "requires_resident", False):
             return run_resident(engine, algorithm, backend, core=core,
                                 cnt=cnt, superstep_chunk=superstep_chunk)
     planner = engine.planner
@@ -934,7 +1016,7 @@ def warm_settle(engine, core0: np.ndarray, applied_inserts: int,
     if backend.device_resident:
         from .resident import resident_enabled, run_resident
 
-        if resident_enabled():
+        if resident_enabled() or getattr(backend, "requires_resident", False):
             # same discipline, device-resident: the exact-cnt scan runs on
             # the bound structure (charged identically) and the settle
             # passes continue on device without re-downloading (core, cnt)

@@ -60,12 +60,16 @@ class BatchMaintStats:
 class CoreMaintainer:
     """Holds (core, cnt) over a BufferedGraph; applies edge updates.
 
-    ``backend`` selects the batch-schedule compute substrate (DESIGN.md §11)
-    for the settle loops.  The default ("numpy" via ``backend=None``) keeps
-    the paper's per-edge seq maintenance (Algs. 6-8) exactly as before; any
-    other backend switches :meth:`apply_batch` to the batched settle path
-    (structural update + one warm-started SemiCore* batch settle on that
-    backend — the stream/recovery discipline).
+    ``backend`` selects the batch-schedule compute substrate (DESIGN.md §11,
+    §13) for the settle loops.  The default ("numpy" via ``backend=None``)
+    keeps the paper's per-edge seq maintenance (Algs. 6-8) exactly as
+    before; any other backend switches :meth:`apply_batch` to the batched
+    settle path (structural update + one warm-started SemiCore* batch
+    settle on that backend — the stream/recovery discipline).  Device
+    backends settle on their bound resident structure — the flat table for
+    xla/pallas, the sharded mesh table for ``"shard"`` — with the exact-cnt
+    prologue computed in place; the structure is version-keyed, so a no-op
+    batch re-uploads (and re-shards) nothing.
     """
 
     def __init__(

@@ -47,8 +47,12 @@ import numpy as np
 
 __all__ = [
     "ResidentStructure",
+    "ShardedStructure",
     "build_structure",
+    "build_sharded_structure",
+    "build_shard_chunk_fn",
     "run_resident",
+    "run_sharded",
     "resident_enabled",
     "trace_count",
     "chunk_len",
@@ -437,7 +441,8 @@ def run_resident(engine, algorithm: str, backend, *,
                  core: np.ndarray | None = None,
                  cnt: np.ndarray | None = None,
                  initial_cnt_scan: bool = False,
-                 superstep_chunk: int | None = None):
+                 superstep_chunk: int | None = None,
+                 max_supersteps: int | None = None):
     """Run a batch-schedule decomposition with the fixpoint device-resident.
 
     Mirrors :func:`engine.run_batch` pass-for-pass (same frontiers, same
@@ -446,7 +451,19 @@ def run_resident(engine, algorithm: str, backend, *,
     ``initial_cnt_scan`` (the warm-settle discipline), ``cnt`` is recomputed
     exactly on device from the warm ``core`` upper bound — one accounted
     full scan — before the SemiCore* passes.
+
+    A mesh-sharded backend (``ShardedBackend``) dispatches to
+    :func:`run_sharded`: same contract, edge table sharded over the mesh.
     """
+    if getattr(backend, "mesh_sharded", False):
+        return run_sharded(engine, algorithm, backend, core=core, cnt=cnt,
+                           initial_cnt_scan=initial_cnt_scan,
+                           superstep_chunk=superstep_chunk,
+                           max_supersteps=max_supersteps)
+    if max_supersteps is not None:
+        raise ValueError("max_supersteps is only supported on the shard "
+                         "backend (chunk-granular budgeted runs)")
+
     import jax.numpy as jnp
 
     from .engine import DecompResult
@@ -615,3 +632,538 @@ def _replay_chunk(planner, rs, be, nb, tally, fronts, upds, ran,
         comp_hist.append(int(len(frontier)))
         _replay_pass(planner, frontier, tally, rs, be, nb)
     return iters, comp
+
+
+# ===========================================================================
+# Mesh-sharded execution (the `shard` backend, DESIGN.md §13)
+# ===========================================================================
+@dataclass
+class ShardedStructure:
+    """The on-mesh working set of one graph version.
+
+    The merged flat adjacency is cut into contiguous node-range shards
+    (``distributed.shard_arrays``: minimax edge balance, int32-validated)
+    and device_put once per structural version — the same version-keyed
+    cache contract as :class:`ResidentStructure`.  Host copies of the
+    owned-slot maps stay for reassembling global masks/arrays from the
+    per-shard slices the chunk fns emit.
+    """
+
+    graph: object            # base CSRGraph this structure was built from
+    version: int             # BufferedGraph.version at build time (0 if none)
+    n: int
+    E: int                   # merged flat edge count (buffered deltas applied)
+    S: int                   # mesh width (number of shards)
+    V: int                   # owned-node slots per shard (padded)
+    seg_ptr: np.ndarray      # (n+1,) int64 merged flat offsets, host
+    owned_ids_h: np.ndarray  # (S, V) int32 host — global id per slot (pad n)
+    owned_mask_h: np.ndarray # (S, V) bool host
+    owned_flat: np.ndarray   # (S*V,) int32 host — all_gather-ordered ids
+    pad_edges: int           # S * Emax - E (rectangular-layout waste)
+    per_shard_edges: np.ndarray  # (S,) int64
+    mesh: object             # jax Mesh over the first S devices
+    dst_j: object            # (S, Emax) int32, sharded
+    rows_j: object           # (S, Emax) int32, sharded
+    emask_j: object          # (S, Emax) bool, sharded
+    lseg_j: object           # (S, V+1) int32, sharded — local CSR offsets
+    owned_ids_j: object      # (S, V) int32, sharded
+    owned_mask_j: object     # (S, V) bool, sharded
+
+    def matches(self, planner) -> bool:
+        buffered = planner.eng.buffered
+        ver = buffered.version if buffered is not None else 0
+        return self.graph is planner.eng.graph and self.version == ver
+
+
+def build_sharded_structure(planner, num_shards: int,
+                            devices=None) -> ShardedStructure:
+    """Merged flat adjacency of all nodes, sharded and uploaded once
+    (charge-free, like :func:`build_structure` — disk I/O stays per-pass,
+    replayed planner-side).  ``devices`` pins the mesh to an explicit
+    device list (default: the first ``num_shards`` visible devices)."""
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from .distributed import shard_arrays
+
+    planner.eng._sync()
+    nbr_flat, seg_ptr = planner.full_structure()
+    n = planner.n
+    sg = shard_arrays(nbr_flat, seg_ptr, num_shards, n=n)
+    S = sg.owned_ids.shape[0]
+    pool = list(devices) if devices is not None else jax.devices()
+    mesh = Mesh(np.asarray(pool[:S]), ("shard",))
+    sh = NamedSharding(mesh, P("shard"))
+    owned_flat = sg.owned_ids.reshape(-1).astype(np.int32)
+    buffered = planner.eng.buffered
+    return ShardedStructure(
+        graph=planner.eng.graph,
+        version=buffered.version if buffered is not None else 0,
+        n=n,
+        E=int(len(nbr_flat)),
+        S=S,
+        V=int(sg.owned_ids.shape[1]),
+        seg_ptr=np.asarray(seg_ptr, dtype=np.int64),
+        owned_ids_h=sg.owned_ids,
+        owned_mask_h=sg.owned_mask,
+        owned_flat=owned_flat,
+        pad_edges=int(sg.pad_edges),
+        per_shard_edges=sg.per_shard_edges,
+        mesh=mesh,
+        dst_j=jax.device_put(sg.dst, sh),
+        rows_j=jax.device_put(sg.rows, sh),
+        emask_j=jax.device_put(sg.edge_mask, sh),
+        lseg_j=jax.device_put(sg.lsegptr, sh),
+        owned_ids_j=jax.device_put(sg.owned_ids, sh),
+        owned_mask_j=jax.device_put(sg.owned_mask, sh),
+    )
+
+
+def _local_segsum(lseg):
+    """Per-shard segment sum over the shard's *sorted* local rows: prefix
+    sums + boundary gathers (the :func:`_sorted_segsum` discipline applied
+    to the shard's local offsets; padding slots are empty trailing
+    segments, so padded edges never contribute)."""
+    import jax.numpy as jnp
+
+    def segsum(vals, _rows, _num_segments):
+        cs = jnp.concatenate([jnp.zeros((1,), vals.dtype), jnp.cumsum(vals)])
+        return (jnp.take(cs, lseg[1:], mode="clip")
+                - jnp.take(cs, lseg[:-1], mode="clip"))
+
+    return segsum
+
+
+@lru_cache(maxsize=None)
+def _shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
+                    chunk: int, unroll: bool):
+    """Build + jit the on-mesh chunked superstep for one mesh × algorithm.
+
+    The per-shard superstep body is the same fused arithmetic the flat
+    resident path scans (:func:`fused_hindex` / :func:`fused_counts` probe
+    code via the shared engine ops) applied to the shard's local edge
+    arrays; one ``jax.lax.all_gather`` of the owned core slices per
+    superstep rebuilds the replicated core, and one scalar ``psum`` carries
+    the convergence count.  The push rule / changed-neighbor propagation
+    read the *gathered* post-update core instead of a local ``h`` (for an
+    inactive neighbor ``core2 == core`` makes the push predicate
+    unsatisfiable, so no activity mask crosses shards), which keeps every
+    superstep at exactly one all_gather.
+
+    Per-pass owned frontier slices come back through the scan's ys —
+    sharded outputs, no extra collective — for the host accounting replay.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..compat.jaxshims import shard_map
+    from .engine import edge_ge_counts, hindex_bsearch
+
+    axes = tuple(mesh.axis_names)
+    shard = P(axes)
+    repl = P()
+
+    def strip(*arrs):
+        return tuple(a[0] for a in arrs)
+
+    def gather_core(core, c_new, owned_flat):
+        gathered = jax.lax.all_gather(c_new, axes, tiled=True)
+        return jnp.zeros((n + 1,), core.dtype).at[owned_flat].set(gathered)[:n]
+
+    def flat_ids(owned_ids):
+        # the static scatter index map: gathered ONCE per chunk call (not
+        # per superstep, and not shipped replicated from the host — the
+        # §13 memory model keeps replicated inputs at core-in + core-out)
+        return jax.lax.all_gather(owned_ids, axes, tiled=True)
+
+    if algorithm == "semicore":
+        # every node, every pass; done after the first no-update pass
+        def body(core, done, dst, rows, emask, lseg, owned_ids, owned_mask):
+            _TRACE_COUNT[0] += 1
+            dst, rows, emask, lseg, owned_ids, owned_mask = strip(
+                dst, rows, emask, lseg, owned_ids, owned_mask)
+            segsum = _local_segsum(lseg)
+            owned_flat = flat_ids(owned_ids)
+
+            def run(args):
+                core, _ = args
+                nbr_vals = jnp.take(core, dst, mode="clip")
+                c_old = jnp.where(owned_mask,
+                                  jnp.take(core, owned_ids, mode="clip"), 0)
+                h = hindex_bsearch(nbr_vals, rows, emask, c_old, num_probes,
+                                   segment_sum_fn=segsum, unroll=unroll)
+                core2 = gather_core(core, h, owned_flat)
+                upd = jnp.sum((core2 != core).astype(jnp.int32))
+                return (core2, upd == 0), upd
+
+            def skip(args):
+                return args, jnp.int32(0)
+
+            def step(carry, _):
+                _, done = carry
+                carry2, upd = jax.lax.cond(done, skip, run, carry)
+                return carry2, (upd, ~done)
+
+            (core, done), (upds, ran) = jax.lax.scan(
+                step, (core, done), None, length=chunk)
+            return core, done, upds, ran
+
+        in_specs = (repl, repl, shard, shard, shard, shard, shard, shard)
+        out_specs = (repl, repl, repl, repl)
+
+    elif algorithm == "semicore+":
+        # neighbors of changed nodes (Lemma 4.1), alive nodes only; the
+        # changed mask is derived globally from the gathered core
+        # (core2 != core), so propagation is a local row reduction
+        def body(core, active_b, nact, dst, rows, emask, lseg, owned_ids,
+                 owned_mask):
+            _TRACE_COUNT[0] += 1
+            dst, rows, emask, lseg, owned_ids, owned_mask, active0 = strip(
+                dst, rows, emask, lseg, owned_ids, owned_mask, active_b)
+            segsum = _local_segsum(lseg)
+            owned_flat = flat_ids(owned_ids)
+
+            def run(args):
+                core, active, _ = args
+                nbr_vals = jnp.take(core, dst, mode="clip")
+                c_owned = jnp.where(owned_mask,
+                                    jnp.take(core, owned_ids, mode="clip"), 0)
+                c_old = jnp.where(active, c_owned, 0)
+                h = hindex_bsearch(nbr_vals, rows, emask, c_old, num_probes,
+                                   segment_sum_fn=segsum, unroll=unroll)
+                c_new = jnp.where(active, h, c_owned)
+                core2 = gather_core(core, c_new, owned_flat)
+                upd = jnp.sum((core2 != core).astype(jnp.int32))
+                changed_e = jnp.take(core2 != core, dst, mode="clip") & emask
+                touched = segsum(changed_e.astype(jnp.int32), rows, 0)
+                active2 = (touched > 0) & (c_new > 0) & owned_mask
+                nact2 = jax.lax.psum(
+                    jnp.sum(active2.astype(jnp.int32)), axes)
+                return (core2, active2, nact2), upd
+
+            def skip(args):
+                return args, jnp.int32(0)
+
+            def step(carry, _):
+                _, active, nact = carry
+                ran = nact > 0
+                carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                return carry2, (active, upd, ran)
+
+            (core, active, nact), (fronts, upds, ran) = jax.lax.scan(
+                step, (core, active0, nact), None, length=chunk)
+            return (core, active[None], nact, fronts[:, None, :], upds, ran)
+
+        in_specs = (repl, shard, repl, shard, shard, shard, shard, shard,
+                    shard)
+        out_specs = (repl, shard, repl, P(None, axes, None), repl, repl)
+
+    elif algorithm == "semicore*":
+        # cnt-gated (Lemma 4.2) with exact cnt maintenance: cnt stays
+        # owner-local (each shard maintains its owned slice), the push rule
+        # reads the gathered core2 in place of the neighbor's local h
+        def body(core, cnt_b, active_b, nact, dst, rows, emask, lseg,
+                 owned_ids, owned_mask):
+            _TRACE_COUNT[0] += 1
+            dst, rows, emask, lseg, owned_ids, owned_mask, cnt0, active0 = \
+                strip(dst, rows, emask, lseg, owned_ids, owned_mask, cnt_b,
+                      active_b)
+            segsum = _local_segsum(lseg)
+            owned_flat = flat_ids(owned_ids)
+
+            def run(args):
+                core, cnt, active, _ = args
+                nbr_vals = jnp.take(core, dst, mode="clip")  # pass-start
+                c_owned = jnp.where(owned_mask,
+                                    jnp.take(core, owned_ids, mode="clip"), 0)
+                c_old = jnp.where(active, c_owned, 0)
+                h = hindex_bsearch(nbr_vals, rows, emask, c_old, num_probes,
+                                   segment_sum_fn=segsum, unroll=unroll)
+                c_new = jnp.where(active, h, c_owned)
+                core2 = gather_core(core, c_new, owned_flat)
+                upd = jnp.sum((core2 != core).astype(jnp.int32))
+                # (1) recompute cnt of the frontier vs pass-start values
+                thr = jnp.where(active, h, 0)
+                refreshed = edge_ge_counts(nbr_vals, rows, emask, thr,
+                                           c_old.shape[0],
+                                           segment_sum_fn=segsum)
+                # (2) push decrements: dec[u] = #{edges (v in F -> u) :
+                #     core_now(u) in (h(v), c_old(v)]} — core2[v] stands in
+                #     for h(v) (equal where v is active; for inactive v,
+                #     core2 == core makes the interval empty)
+                c2_row = jnp.take(c_new, rows, mode="clip")
+                push = (emask & (c2_row > jnp.take(core2, dst, mode="clip"))
+                        & (c2_row <= nbr_vals))
+                dec = segsum(push.astype(jnp.int32), rows, 0)
+                cnt2 = jnp.where(active, refreshed, cnt) - dec
+                active2 = (cnt2 < c_new) & (c_new > 0) & owned_mask
+                nact2 = jax.lax.psum(
+                    jnp.sum(active2.astype(jnp.int32)), axes)
+                return (core2, cnt2, active2, nact2), upd
+
+            def skip(args):
+                return args, jnp.int32(0)
+
+            def step(carry, _):
+                _, _, active, nact = carry
+                ran = nact > 0
+                carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                return carry2, (active, upd, ran)
+
+            (core, cnt, active, nact), (fronts, upds, ran) = jax.lax.scan(
+                step, (core, cnt0, active0, nact), None, length=chunk)
+            return (core, cnt[None], active[None], nact,
+                    fronts[:, None, :], upds, ran)
+
+        in_specs = (repl, shard, shard, repl, shard, shard, shard, shard,
+                    shard, shard)
+        out_specs = (repl, shard, shard, repl, P(None, axes, None), repl,
+                     repl)
+
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
+    return jax.jit(
+        sharded,
+        in_shardings=tuple(NamedSharding(mesh, s) for s in in_specs),
+    )
+
+
+def build_shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
+                         chunk: int | None = None):
+    """Public builder of the on-mesh chunked superstep jit (also the
+    dry-run cost-analysis entry, launch/steps.py).  ``REPRO_UNROLL_SCANS=1``
+    unrolls the h-index probe loop so cost analysis sees every scan."""
+    return _shard_chunk_fn(mesh, algorithm, n, num_probes, chunk_len(chunk),
+                           os.environ.get("REPRO_UNROLL_SCANS") == "1")
+
+
+@lru_cache(maxsize=None)
+def _shard_counts_fn(mesh, n: int):
+    """Full-table exact-cnt scan (warm_settle's Eq. 2 prologue), on-mesh:
+    each shard counts its owned nodes' thresholds over local edges."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..compat.jaxshims import shard_map
+    from .engine import edge_ge_counts
+
+    axes = tuple(mesh.axis_names)
+    shard = P(axes)
+    repl = P()
+
+    def body(core, dst, rows, emask, lseg, owned_ids, owned_mask):
+        _TRACE_COUNT[0] += 1
+        dst = dst[0]; rows = rows[0]; emask = emask[0]; lseg = lseg[0]
+        owned_ids = owned_ids[0]; owned_mask = owned_mask[0]
+        segsum = _local_segsum(lseg)
+        c_owned = jnp.where(owned_mask,
+                            jnp.take(core, owned_ids, mode="clip"), 0)
+        nbr_vals = jnp.take(core, dst, mode="clip")
+        cnt = edge_ge_counts(nbr_vals, rows, emask, c_owned,
+                             c_owned.shape[0], segment_sum_fn=segsum)
+        return cnt[None]
+
+    in_specs = (repl, shard, shard, shard, shard, shard, shard)
+    sharded = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=shard, check_vma=False)
+    return jax.jit(
+        sharded,
+        in_shardings=tuple(NamedSharding(mesh, s) for s in in_specs),
+    )
+
+
+def run_sharded(engine, algorithm: str, backend, *,
+                core: np.ndarray | None = None,
+                cnt: np.ndarray | None = None,
+                initial_cnt_scan: bool = False,
+                superstep_chunk: int | None = None,
+                max_supersteps: int | None = None):
+    """Run a batch-schedule decomposition with the fixpoint on-mesh.
+
+    The shard-layout sibling of the flat resident runner: identical passes,
+    histories, and planner replay (the differential sweep asserts parity at
+    every shard count), with the edge table sharded over the mesh and cnt
+    maintained owner-local.  ``max_supersteps`` budgets the run exactly
+    (the final chunk's scan length is clamped to the remaining budget) for
+    checkpoint demos — the partial core is a valid upper bound by monotone
+    convergence.
+    """
+    import jax.numpy as jnp
+
+    from .engine import DecompResult
+
+    planner = engine.planner
+    n = engine.n
+    ss = backend.bind_resident(planner)
+    chunk = chunk_len(superstep_chunk)
+    unroll = os.environ.get("REPRO_UNROLL_SCANS") == "1"
+
+    warm = core is not None
+    if warm:
+        core = np.asarray(core, dtype=np.int64).copy()
+    else:
+        core = engine.degrees().astype(np.int64)
+    cmax = int(core.max()) if n else 0
+    num_probes = max(1, int(np.ceil(np.log2(cmax + 2))))
+    core_j = jnp.asarray(core.astype(np.int32))
+
+    upd_hist: list = []
+    comp_hist: list = []
+    iters = 0
+    comp = 0
+    all_nodes = np.arange(n, dtype=np.int64)
+    own_ids = ss.owned_ids_h[ss.owned_mask_h]  # global id per real slot
+
+    def localize(arr, fill, dtype):
+        """Scatter a global (n,) array into the (S, V) owned-slot layout."""
+        out = np.full((ss.S, ss.V), fill, dtype=dtype)
+        out[ss.owned_mask_h] = arr[own_ids].astype(dtype)
+        return out
+
+    def globalize(slices, fill, dtype):
+        """Gather (S, V) owned-slot slices back to a global (n,) array."""
+        out = np.full(n, fill, dtype=dtype)
+        out[own_ids] = np.asarray(slices)[ss.owned_mask_h]
+        return out
+
+    def front_masks(fronts):
+        """(chunk, S, V) pass-start owned slices -> (chunk, n) bool masks."""
+        fronts = np.asarray(fronts)
+        return np.stack([globalize(fronts[k], False, bool)
+                         for k in range(len(fronts))])
+
+    def budget_hit():
+        return max_supersteps is not None and iters >= max_supersteps
+
+    def budget_fn():
+        """The chunk jit, with the scan length clamped to the remaining
+        superstep budget so a budget below the chunk size is honored
+        exactly (each distinct length hits the lru'd jit cache)."""
+        c = chunk if max_supersteps is None else \
+            max(1, min(chunk, max_supersteps - iters))
+        return _shard_chunk_fn(ss.mesh, algorithm, n, num_probes, c, unroll)
+
+    def result(core_f, cnt_f):
+        backend.unbind()
+        return DecompResult(
+            core=np.asarray(core_f, dtype=np.int64),
+            cnt=None if cnt_f is None else np.asarray(cnt_f, dtype=np.int64),
+            iterations=iters,
+            node_computations=comp,
+            edge_block_reads=planner.reader.reads,
+            node_table_reads=planner.reader.node_table_reads,
+            algorithm=algorithm,
+            schedule="batch",
+            updates_per_iter=upd_hist,
+            computations_per_iter=comp_hist,
+            backend=backend.name,
+            num_shards=ss.S,
+            shard_pad_edges=ss.pad_edges,
+        )
+
+    # ------------------------------------------------------------ semicore*
+    if algorithm == "semicore*":
+        if initial_cnt_scan:
+            # warm_settle prologue: one accounted full scan recomputes cnt
+            # exactly (Eq. 2) w.r.t. the warm upper bound — on the mesh,
+            # against the bound sharded structure
+            planner.charge_only(all_nodes)
+            planner.account_node_scan(0, n - 1)
+            if ss.E:
+                counts = _shard_counts_fn(ss.mesh, n)
+                cnt_lj = counts(core_j, ss.dst_j, ss.rows_j, ss.emask_j,
+                                ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                cnt = globalize(cnt_lj, 0, np.int64)
+            else:
+                cnt = np.zeros(n, dtype=np.int64)
+        elif warm:
+            cnt = np.asarray(cnt, dtype=np.int64).copy()
+        else:
+            cnt = np.zeros(n, dtype=np.int64)
+        active0 = (cnt < core) & (core > 0)
+        if ss.E == 0:
+            # edgeless table: any deficient node drops straight to h = 0 in
+            # one pass, and nothing can re-activate — numpy's loop verbatim
+            if active0.any():
+                f = np.flatnonzero(active0)
+                iters, comp = 1, len(f)
+                upd_hist.append(int((core[f] != 0).sum()))
+                comp_hist.append(len(f))
+                _replay_pass(planner, f, None, ss, 0, 0)
+                core[f] = 0
+                cnt[f] = 0
+            return result(core, cnt)
+        if not active0.any():
+            # settled warm state: zero passes, like numpy's while-loop
+            return result(core, cnt)
+        cnt_lj = localize(cnt, 0, np.int32)
+        act_lj = localize(active0, False, bool)
+        nact = np.int32(active0.sum())
+        while True:
+            core_j, cnt_lj, act_lj, nact, fronts, upds, ran = budget_fn()(
+                core_j, cnt_lj, act_lj, nact, ss.dst_j, ss.rows_j,
+                ss.emask_j, ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+            iters, comp = _replay_chunk(
+                planner, ss, 0, 0, None, front_masks(fronts),
+                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                iters, comp)
+            if int(nact) == 0 or budget_hit():
+                break
+        return result(core_j, globalize(cnt_lj, 0, np.int64))
+
+    # ------------------------------------------------- semicore / semicore+
+    if ss.E == 0:
+        # h == core == degrees == 0 everywhere: semicore runs exactly one
+        # all-node pass; semicore+ starts from the all-node frontier and
+        # likewise converges on pass one (numpy loop, charge-for-charge)
+        if algorithm == "semicore" or n:
+            iters, comp = 1, n
+            upd_hist.append(0)
+            comp_hist.append(n)
+            planner.charge_only(all_nodes)
+            planner.account_node_scan(0, n - 1)
+        return result(core, None)
+
+    if algorithm == "semicore":
+        # every node, every pass — the final no-update pass included
+        done_j = jnp.asarray(False)
+        while True:
+            core_j, done_j, upds, ran = budget_fn()(
+                core_j, done_j, ss.dst_j, ss.rows_j, ss.emask_j, ss.lseg_j,
+                ss.owned_ids_j, ss.owned_mask_j)
+            ran = np.asarray(ran)
+            upds = np.asarray(upds)
+            for k in range(len(ran)):
+                if not ran[k]:
+                    break
+                iters += 1
+                comp += n
+                upd_hist.append(int(upds[k]))
+                comp_hist.append(n)
+                planner.charge_only(all_nodes)
+                planner.account_node_scan(0, n - 1)
+            if bool(done_j) or budget_hit():
+                break
+        return result(core_j, None)
+
+    if algorithm == "semicore+":
+        act_lj = localize(np.ones(n, dtype=bool), False, bool)
+        nact = np.int32(n)
+        while True:
+            core_j, act_lj, nact, fronts, upds, ran = budget_fn()(
+                core_j, act_lj, nact, ss.dst_j, ss.rows_j, ss.emask_j,
+                ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+            iters, comp = _replay_chunk(
+                planner, ss, 0, 0, None, front_masks(fronts),
+                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                iters, comp)
+            if int(nact) == 0 or budget_hit():
+                break
+        return result(core_j, None)
+
+    raise ValueError(f"unknown algorithm {algorithm!r}")

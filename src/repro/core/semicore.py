@@ -66,8 +66,8 @@ class HostEngine:
     ``pool_blocks`` sizes the :class:`BlockReader` LRU buffer pool; the
     default of 1 is the paper's single-buffer model (DESIGN.md §10).
     Batch-schedule compute is delegated to :mod:`repro.core.engine`; pass
-    ``backend=`` ("numpy" | "xla" | "pallas", or a ComputeBackend instance)
-    to pick the substrate.
+    ``backend=`` ("numpy" | "xla" | "pallas" | "shard", or a ComputeBackend
+    instance) to pick the substrate.
     """
 
     def __init__(
@@ -298,7 +298,7 @@ def decompose(
     """One-call core decomposition with the chosen paper algorithm.
 
     ``backend`` picks the batch-schedule compute substrate ("numpy" | "xla" |
-    "pallas" | a ComputeBackend instance); ``None`` defers to the
+    "pallas" | "shard" | a ComputeBackend instance); ``None`` defers to the
     ``REPRO_BACKEND`` environment variable (default numpy).  The seq schedule
     is the paper-faithful numpy reference path.  ``superstep_chunk`` sizes
     the device-resident passes-per-round-trip (CoreGraphConfig field /

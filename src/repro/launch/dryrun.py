@@ -157,9 +157,13 @@ def _memory_model(arch, shape, mesh, bundle, chips) -> dict:
     act = 0.0
     grads = 0.0
     if cfg.kind == "coregraph":
-        # replicated node state (core in + combined out) + per-chip edge shard
-        args = 2 * cfg.n * 4 + cfg.m_directed / chips * 9 + cfg.n / chips * 5
-        act = cfg.m_directed / chips * 8  # bucket histogram + index arrays
+        # replicated node state (core in + combined out) + per-chip edge
+        # shard (dst/rows/mask) + per-chip owned-slot state (ids/mask/
+        # lsegptr/cnt/active); the scatter id map is gathered on-mesh per
+        # chunk, not shipped replicated (resident._shard_chunk_fn)
+        args = 2 * cfg.n * 4 + cfg.m_directed / chips * 9 \
+            + cfg.n / chips * 14
+        act = cfg.m_directed / chips * 8  # gathered nbr cores + index arrays
     elif bundle.name == "train_step" and cfg.kind == "lm":
         accum = bundle.static.get("accum", 1)
         from ..configs import SHAPES_BY_KIND

@@ -29,9 +29,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist, as a 1-D mesh (tests / reduced runs)."""
+def make_host_mesh(max_data: int | None = 1):
+    """A (data, model) host mesh for tests / reduced runs.
+
+    ``max_data`` caps the data axis (default 1): the CI matrix forces up to
+    8 virtual host devices (ci.yml, DESIGN.md §7) and reduced-cell batch
+    sizes need not divide the forced device count, so the smoke meshes stay
+    single-shard unless a caller opts into more.  ``None`` spans every
+    visible device.
+    """
     import numpy as np
 
     dev = np.array(jax.devices())
+    if max_data is not None:
+        dev = dev[: max(1, int(max_data))]
     return jax.sharding.Mesh(dev.reshape(-1, 1), ("data", "model"))

@@ -304,15 +304,17 @@ def _build_recsys(cfg: RecsysConfig, shape_name, step_kind, avals, mesh, opt,
 # =============================================================== coregraph
 def _build_coregraph(cfg: CoreGraphConfig, shape_name, step_kind, avals, mesh,
                      opt, reduced):
-    from ..core.distributed import build_decompose_fn
+    # one cond-gated SemiCore* superstep of the shard backend (chunk=1), the
+    # §Perf measurement unit: its HLO contains exactly the per-superstep
+    # collectives (one all_gather of owned core slices + the scalar psum)
+    from ..core.resident import build_shard_chunk_fn
 
     specs = avals["specs"]
     num_probes = avals["num_probes"]
-    fn = build_decompose_fn(mesh, cfg.n, num_probes, star_gating=True,
-                            max_supersteps=2000)
-    args = (specs["core0"], specs["dst"], specs["rows"], specs["edge_mask"],
-            specs["owned_ids"], specs["owned_mask"])
-    shard_spec = _ns(mesh, _all_axes(mesh))
+    fn = build_shard_chunk_fn(mesh, "semicore*", cfg.n, num_probes, chunk=1)
+    args = (specs["core0"], specs["cnt"], specs["active"], specs["nactive"],
+            specs["dst"], specs["rows"], specs["edge_mask"],
+            specs["lsegptr"], specs["owned_ids"], specs["owned_mask"])
     return StepBundle(
         name="decompose", fn=fn, args=args,
         in_shardings=None,  # already a jit-wrapped fn with shardings

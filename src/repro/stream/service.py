@@ -165,14 +165,15 @@ class _LRUCache:
 class CoreService:
     """Owns the semi-external node state and serves it under a live stream.
 
-    ``backend`` selects the batch-settle compute substrate ("numpy" | "xla" |
-    "pallas", DESIGN.md §11); the numpy default keeps the paper's per-edge
-    seq maintenance, any other backend ingests each batch through one
-    warm-started SemiCore* batch settle on that backend — device-resident by
-    default (DESIGN.md §12): the settle's node state stays on device across
-    its passes, and the uploaded edge table is version-keyed on the
-    long-lived maintainer, so a batch that turns out structure-free (all
-    no-ops) re-uploads nothing.
+    ``backend`` selects the batch-settle compute substrate ("numpy" | "xla"
+    | "pallas" | "shard", DESIGN.md §11/§13); the numpy default keeps the
+    paper's per-edge seq maintenance, any other backend ingests each batch
+    through one warm-started SemiCore* batch settle on that backend —
+    device-resident by default (DESIGN.md §12): the settle's node state
+    stays on device across its passes, and the uploaded edge table (sharded
+    over the mesh for ``"shard"``) is version-keyed on the long-lived
+    maintainer, so a batch that turns out structure-free (all no-ops)
+    re-uploads nothing.
     """
 
     def __init__(

@@ -92,7 +92,12 @@ class TrainLoop:
     def __post_init__(self):
         from ..optim import AdamWConfig
 
-        self.mesh = make_host_mesh()
+        # single data shard by choice: TrainLoop drives *reduced* cells whose
+        # batch sizes (e.g. 2) need not divide a forced multi-device host
+        # (the CI device matrix); production data parallelism goes through
+        # launch/steps.py on a real mesh, not this harness.  Pass
+        # make_host_mesh(max_data=None) here to span every visible device.
+        self.mesh = make_host_mesh(max_data=1)
         cfg = get_config(self.arch)
         if self.reduced:
             cfg = cfg.reduced()

@@ -11,10 +11,12 @@ Backings:
                    update buffer patches it back — so merged neighbor reads,
                    not just passthrough, are what the engine consumes.
 
-Backends (batch schedule; DESIGN.md §11): ``numpy`` — the historical host
-loops, whose traces must stay bit-identical; ``xla`` — jit'd binary-search
-h-index shared with the SPMD engine; ``pallas-interpret`` — block-skipping
-kernels through the Pallas interpreter.
+Backends (batch schedule; DESIGN.md §11, §13): ``numpy`` — the historical
+host loops, whose traces must stay bit-identical; ``xla`` — jit'd
+binary-search h-index on the device-resident fixpoint; ``pallas-interpret``
+— block-skipping kernels through the Pallas interpreter; ``shard`` — the
+on-mesh sharded fixpoint (one shard per visible device, so the CI 8-device
+matrix leg runs this sweep over a real 8-way mesh).
 """
 import os
 import tempfile
@@ -36,7 +38,7 @@ from repro.graph import (
 ALGORITHMS = ["semicore", "semicore+", "semicore*"]
 SCHEDULES = ["seq", "batch"]
 BACKINGS = ["inmem", "memmap", "buffered"]
-BACKENDS = ["numpy", "xla", "pallas-interpret"]
+BACKENDS = ["numpy", "xla", "pallas-interpret", "shard"]
 
 
 # ----------------------------------------------------------- graph families
