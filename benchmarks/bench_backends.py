@@ -49,6 +49,9 @@ from repro.core import resident  # noqa: E402
 from repro.core.imcore import imcore_bz  # noqa: E402
 from repro.core.semicore import decompose  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+from repro.obs.bench import shared_result  # noqa: E402
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -67,20 +70,69 @@ TRAJECTORY_WARM_REPEATS = 3
 
 
 def _timed(g, algo, backend, block_edges, warm_repeats: int = 1):
-    """(cold_seconds, warm_seconds, jit_traces, result) for one config."""
+    """(cold_s, warm_s, jit_traces, result, obs_delta) for one config.
+
+    ``obs_delta`` is the telemetry-registry delta around the *last* warm run
+    (one full decompose), the registry-sourced mirror of the DecompResult
+    accounting — reconciled loudly by the callers.
+    """
     t0 = resident.trace_count()
     w0 = time.perf_counter()
     r = decompose(g, algo, "batch", block_edges=block_edges, backend=backend)
     cold = time.perf_counter() - w0
     traces = resident.trace_count() - t0
     warm = float("inf")
-    for _ in range(max(1, warm_repeats)):
+    delta = {}
+    for i in range(max(1, warm_repeats)):
+        snap = obs_metrics.get_registry().snapshot()
         w1 = time.perf_counter()
         r2 = decompose(g, algo, "batch", block_edges=block_edges,
                        backend=backend)
-        warm = min(warm, time.perf_counter() - w1)
+        wall = time.perf_counter() - w1
+        if wall < warm or not delta:
+            delta = obs_metrics.get_registry().delta(snap)
+        warm = min(warm, wall)
         assert np.array_equal(r.core, r2.core)
-    return cold, warm, traces, r
+    return cold, warm, traces, r, delta
+
+
+def _reconcile(delta: dict, r, where) -> dict:
+    """Registry-sourced I/O numbers for one decompose, asserted == DecompResult.
+
+    This is the migration contract: benches now *source* their io columns
+    from the metrics registry, and the old hand-tracked DecompResult numbers
+    become the cross-check instead of the source.  Under ``REPRO_OBS=0`` the
+    registry is silent, so the DecompResult numbers are used directly.
+    """
+    if not obs_metrics.obs_enabled():
+        return {
+            "edge_block_reads": r.edge_block_reads,
+            "node_table_reads": r.node_table_reads,
+            "iterations": r.iterations,
+            "kernel_blocks_active": r.kernel_blocks_active,
+            "kernel_blocks_skipped": r.kernel_blocks_skipped,
+        }
+    s = obs_metrics.sum_by_name
+    out = {
+        "edge_block_reads": int(s(delta, "repro_io_edge_block_reads_total")),
+        "node_table_reads": int(s(delta, "repro_io_node_table_reads_total")),
+        "iterations": int(s(delta, "repro_engine_passes_total")),
+        "kernel_blocks_active": int(
+            s(delta, "repro_kernel_blocks_active_total")),
+        "kernel_blocks_skipped": int(
+            s(delta, "repro_kernel_blocks_skipped_total")),
+    }
+    assert out["edge_block_reads"] == r.edge_block_reads, \
+        (where, out["edge_block_reads"], r.edge_block_reads)
+    assert out["node_table_reads"] == r.node_table_reads, \
+        (where, out["node_table_reads"], r.node_table_reads)
+    assert out["iterations"] == r.iterations, \
+        (where, out["iterations"], r.iterations)
+    assert out["kernel_blocks_active"] == r.kernel_blocks_active, \
+        (where, out["kernel_blocks_active"], r.kernel_blocks_active)
+    assert out["kernel_blocks_skipped"] == r.kernel_blocks_skipped, \
+        (where, out["kernel_blocks_skipped"], r.kernel_blocks_skipped)
+    return out
 
 
 def smoke() -> None:
@@ -122,11 +174,15 @@ def _bench_graph(g, block_edges, backends, label):
     warm_numpy: dict = {}
     for backend in backends:
         for algo in ALGORITHMS:
-            cold, warm, traces, r = _timed(g, algo, backend, block_edges)
+            cold, warm, traces, r, delta = _timed(g, algo, backend,
+                                                  block_edges)
             cores.setdefault(algo, r.core)
             assert np.array_equal(r.core, cores[algo]), (backend, algo)
             if backend == "numpy":
                 warm_numpy[algo] = warm
+            # io columns come from the telemetry registry, cross-checked
+            # against the DecompResult accounting they mirror
+            rec = _reconcile(delta, r, (label, backend, algo))
             row = {
                 "backend": backend,
                 "algorithm": algo,
@@ -134,12 +190,12 @@ def _bench_graph(g, block_edges, backends, label):
                 "wall_seconds_cold": round(cold, 4),
                 "jit_traces": traces,
                 "speedup_vs_numpy": round(warm_numpy[algo] / warm, 2),
-                "iterations": r.iterations,
+                "iterations": rec["iterations"],
                 "node_computations": r.node_computations,
-                "edge_block_reads": r.edge_block_reads,
-                "node_table_reads": r.node_table_reads,
-                "kernel_blocks_active": r.kernel_blocks_active,
-                "kernel_blocks_skipped": r.kernel_blocks_skipped,
+                "edge_block_reads": rec["edge_block_reads"],
+                "node_table_reads": rec["node_table_reads"],
+                "kernel_blocks_active": rec["kernel_blocks_active"],
+                "kernel_blocks_skipped": rec["kernel_blocks_skipped"],
                 "num_shards": r.num_shards,
                 "shard_pad_edges": r.shard_pad_edges,
             }
@@ -170,11 +226,14 @@ def _measure_trajectory() -> dict:
     warm_numpy: dict = {}
     for backend in BACKENDS:
         for algo in ALGORITHMS:
-            cold, warm, traces, r = _timed(
+            cold, warm, traces, r, delta = _timed(
                 g, algo, backend, cell["block_edges"],
                 warm_repeats=TRAJECTORY_WARM_REPEATS)
             if backend == "numpy":
                 warm_numpy[algo] = warm
+            # keep the committed BENCH_backends.json schema byte-compatible:
+            # iterations are registry-sourced but the row keys are unchanged
+            rec = _reconcile(delta, r, ("traj", backend, algo))
             rows.append({
                 "backend": backend,
                 "algorithm": algo,
@@ -183,7 +242,7 @@ def _measure_trajectory() -> dict:
                 "jit_traces": traces,
                 "ratio_vs_numpy": round(warm / warm_numpy[algo], 3),
                 "speedup_vs_numpy": round(warm_numpy[algo] / warm, 3),
-                "iterations": r.iterations,
+                "iterations": rec["iterations"],
                 "num_shards": r.num_shards,
             })
             print(f"[traj] {backend:>6} {algo:<10} warm={warm:7.3f}s "
@@ -320,6 +379,115 @@ def summary() -> None:
         print()
 
 
+# ================================================================= obs cell
+OBS_CELL = dict(n=25_000, m=110_000, seed=8, block_edges=4096)
+OBS_OVERHEAD_BAND = 0.05      # instrumented warm wall <= 1.05x base ...
+OBS_OVERHEAD_FLOOR_S = 0.05   # ... plus an absolute floor for tiny walls
+OBS_WARM_REPEATS = 3
+
+
+def obs_cell(quick: bool = False) -> int:
+    """CI observability leg: the large bench cell with tracing on.
+
+    Writes three artifacts to ``benchmarks/results/``:
+
+    * ``superstep_trace.json`` — Chrome-trace (Perfetto-loadable) timeline of
+      every superstep/chunk/prologue span of the instrumented runs;
+    * ``metrics.prom`` — the full registry in Prometheus text exposition;
+    * ``obs_summary.md`` — markdown summary for ``$GITHUB_STEP_SUMMARY``.
+
+    Gate: the instrumented warm wall must stay within
+    ``(1 + OBS_OVERHEAD_BAND) x`` the ``REPRO_OBS=0`` wall (+ an absolute
+    floor so sub-100ms cells don't flake).  Returns a process exit code.
+    """
+    cell = dict(OBS_CELL)
+    if quick:
+        cell.update(n=3_000, m=13_000, block_edges=512)
+    g = chung_lu(cell["n"], cell["m"], seed=cell["seed"])
+    algo, backend = "semicore*", "xla"
+
+    def warm_wall(repeats: int = OBS_WARM_REPEATS) -> float:
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = decompose(g, algo, "batch",
+                          block_edges=cell["block_edges"], backend=backend)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    decompose(g, algo, "batch", block_edges=cell["block_edges"],
+              backend=backend)  # jit warm-up, outside both measurements
+
+    prev = os.environ.get(obs_metrics.OBS_ENV_VAR)
+    os.environ[obs_metrics.OBS_ENV_VAR] = "0"
+    try:
+        base = warm_wall()
+    finally:
+        if prev is None:
+            os.environ.pop(obs_metrics.OBS_ENV_VAR, None)
+        else:
+            os.environ[obs_metrics.OBS_ENV_VAR] = prev
+
+    obs_trace.clear_trace()
+    obs_trace.start_trace()
+    snap = obs_metrics.get_registry().snapshot()
+    instrumented = warm_wall()
+    delta = obs_metrics.get_registry().delta(snap)
+    obs_trace.stop_trace()
+
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "superstep_trace.json")
+    obs_trace.get_collector().save(trace_path)
+    n_events = len(obs_trace.get_collector().events)
+    obs_trace.clear_trace()
+    prom_path = os.path.join(RESULTS, "metrics.prom")
+    with open(prom_path, "w") as f:
+        f.write(obs_metrics.get_registry().to_prometheus())
+
+    result = shared_result(f"backends/obs-cell[{backend}/{algo}]",
+                           instrumented, delta,
+                           extra={"wall_seconds_base": round(base, 4),
+                                  "trace_events": n_events,
+                                  "cell": cell})
+    limit = (1.0 + OBS_OVERHEAD_BAND) * base + OBS_OVERHEAD_FLOOR_S
+    ok = instrumented <= limit
+    overhead_pct = 100.0 * (instrumented - base) / max(base, 1e-9)
+
+    md_path = os.path.join(RESULTS, "obs_summary.md")
+    s = obs_metrics.sum_by_name
+    with open(md_path, "w") as f:
+        f.write("### Telemetry cell (instrumented superstep, "
+                f"{backend}/{algo}, n={cell['n']})\n\n")
+        f.write("| metric | value |\n|---|---|\n")
+        f.write(f"| warm wall (REPRO_OBS=0) | {base:.3f}s |\n")
+        f.write(f"| warm wall (instrumented + tracing) | "
+                f"{instrumented:.3f}s |\n")
+        f.write(f"| instrumentation overhead | {overhead_pct:.1f}% "
+                f"(limit {100 * OBS_OVERHEAD_BAND:.0f}% + "
+                f"{OBS_OVERHEAD_FLOOR_S:.2f}s floor) |\n")
+        f.write(f"| passes | "
+                f"{int(s(delta, 'repro_engine_passes_total'))} |\n")
+        f.write(f"| edge-block reads | "
+                f"{int(s(delta, 'repro_io_edge_block_reads_total'))} |\n")
+        f.write(f"| bytes read | "
+                f"{int(s(delta, 'repro_io_bytes_read_total')):,} |\n")
+        f.write(f"| trace events | {n_events} |\n")
+        f.write(f"| gate | {'ok' if ok else 'FAIL'} |\n")
+    with open(os.path.join(RESULTS, "obs_cell.json"), "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+    print(f"[obs] base={base:.3f}s instrumented={instrumented:.3f}s "
+          f"({overhead_pct:+.1f}%, limit {limit:.3f}s) "
+          f"events={n_events} -> {trace_path}")
+    if not ok:
+        print(f"obs overhead gate FAILED: {instrumented:.3f}s > "
+              f"{limit:.3f}s", file=sys.stderr)
+        return 1
+    print("obs overhead gate OK")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -335,6 +503,9 @@ def main() -> None:
     ap.add_argument("--summary", action="store_true",
                     help="markdown wall-clock table (for "
                     "$GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--obs-cell", action="store_true",
+                    help="CI observability leg: traced large cell + "
+                    "Prometheus/Chrome-trace artifacts + overhead gate")
     args = ap.parse_args()
     if args.smoke:
         smoke()
@@ -347,6 +518,8 @@ def main() -> None:
     if args.summary:
         summary()
         return
+    if args.obs_cell:
+        raise SystemExit(obs_cell(quick=args.quick))
 
     n, m = (800, 3200) if args.quick else (4000, 16000)
     block_edges = 256

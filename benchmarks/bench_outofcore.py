@@ -33,6 +33,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.semicore import decompose  # noqa: E402
 from repro.graph import CSRGraph, build_csr, chung_lu, rmat_chunks  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs.bench import shared_result  # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -109,14 +111,35 @@ def bench_pool_sweep(quick: bool) -> dict:
     pools = [1, 16, 64, 256, 1024]
     rows = []
     core0 = None
+    s = obs_metrics.sum_by_name
     for pool in pools:
+        snap = obs_metrics.get_registry().snapshot()
+        t0 = time.perf_counter()
         r = decompose(g, "semicore*", "seq", block_edges=block_edges,
                       pool_blocks=pool)
+        wall = time.perf_counter() - t0
+        delta = obs_metrics.get_registry().delta(snap)
         if core0 is None:
             core0 = r.core
         else:
             assert np.array_equal(r.core, core0)
-        rows.append({"pool_blocks": pool, "edge_block_reads": r.edge_block_reads})
+        # reads come from the telemetry registry, cross-checked against the
+        # DecompResult; hits/evictions exist only in the registry — the
+        # reader's paper accounting never needed them until the pool sweep
+        reads = int(s(delta, "repro_io_edge_block_reads_total"))
+        if obs_metrics.obs_enabled():
+            assert reads == r.edge_block_reads, (pool, reads,
+                                                 r.edge_block_reads)
+        else:
+            reads = r.edge_block_reads
+        rows.append({
+            "pool_blocks": pool,
+            "edge_block_reads": reads,
+            "pool_hits": int(s(delta, "repro_io_edge_block_pool_hits_total")),
+            "evictions": int(s(delta, "repro_io_edge_block_evictions_total")),
+            "obs": shared_result(f"outofcore/pool-sweep[pool={pool}]",
+                                 wall, delta),
+        })
     reads = [row["edge_block_reads"] for row in rows]
     monotone = all(a >= b for a, b in zip(reads, reads[1:]))
     assert monotone, f"pool sweep not monotone: {reads}"

@@ -26,6 +26,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
 
 from repro.core import decompose  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs.bench import shared_result  # noqa: E402
 from repro.stream import CoreService, mixed_stream  # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -33,8 +35,8 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 def query_burst(svc: CoreService, rng, num_queries: int) -> int:
     """A read burst against the current epoch; returns #queries served."""
-    served = 0
     kmax = svc.degeneracy()
+    served = 1  # the degeneracy lookup above is a served query too
     for _ in range(num_queries // 4):
         svc.coreness(int(rng.integers(svc.bg.n)))
         svc.in_kcore(int(rng.integers(svc.bg.n)), max(kmax - 1, 1))
@@ -69,6 +71,9 @@ def main() -> None:
             wal_path=os.path.join(tmp, "wal.jsonl"),
             snapshot_dir=os.path.join(tmp, "snaps"),
         )
+        # telemetry baseline *after* construction: the delta below is pure
+        # workload cost (initial decompose + WAL truncate excluded)
+        obs_snap = obs_metrics.get_registry().snapshot()
         num_batches = -(-len(ops) // batch)
         snapshot_at = max((2 * num_batches) // 3, 1)  # leaves a WAL tail
         update_s = query_s = 0.0
@@ -83,6 +88,13 @@ def main() -> None:
             queries += query_burst(svc, rng, queries_per_batch)
             query_s += time.perf_counter() - t0
 
+        # workload numbers now come from the telemetry registry: the ingest
+        # latency histogram supplies the percentiles and the service
+        # counters supply the served-query and io totals.  The delta is taken
+        # *before* the correctness-gate decompose below so it covers exactly
+        # the streamed workload.
+        delta = obs_metrics.get_registry().delta(obs_snap)
+
         # correctness gate: the stream must equal a fresh decomposition
         final = svc.bg.materialize()
         ref = decompose(final, "semicore*", "batch")
@@ -92,28 +104,36 @@ def main() -> None:
         stats = svc.service_stats()
         applied = stats["updates_applied"]
         cache_total = stats["cache_hits"] + stats["cache_misses"]
+        s = obs_metrics.sum_by_name
+        ingest_hist = obs_metrics.get_registry().get(
+            "repro_service_ingest_seconds")
+        queries_served = int(s(delta, "repro_service_queries_total"))
+        io_reads = int(s(delta, "repro_io_edge_block_reads_total"))
+        nt_reads = int(s(delta, "repro_io_node_table_reads_total"))
+        if obs_metrics.obs_enabled():  # registry must reconcile exactly
+            assert queries_served == queries, (queries_served, queries)
+            assert io_reads == sum(x.edge_block_reads for x in log), io_reads
+            assert nt_reads == sum(x.node_table_reads for x in log), nt_reads
+        else:  # silent registry: fall back to the hand-tracked numbers
+            queries_served = queries
+            io_reads = sum(x.edge_block_reads for x in log)
+            nt_reads = sum(x.node_table_reads for x in log)
         rows = {
             "n": n, "m": m, "num_updates": num_updates, "batch": batch,
             "epochs": svc.epoch,
             "updates_per_s": applied / update_s,
-            "query_qps": queries / query_s,
-            "edge_block_reads_per_batch": float(
-                np.mean([s.edge_block_reads for s in log])
-            ),
-            "node_table_reads_per_batch": float(
-                np.mean([s.node_table_reads for s in log])
-            ),
+            "query_qps": queries_served / query_s,
+            "edge_block_reads_per_batch": io_reads / max(len(log), 1),
+            "node_table_reads_per_batch": nt_reads / max(len(log), 1),
             "node_computations_per_update": float(
-                sum(s.node_computations for s in log) / max(applied, 1)
+                sum(x.node_computations for x in log) / max(applied, 1)
             ),
-            "p50_batch_ms": float(
-                np.percentile([s.wall_time_s for s in log], 50) * 1e3
-            ),
-            "p99_batch_ms": float(
-                np.percentile([s.wall_time_s for s in log], 99) * 1e3
-            ),
+            "p50_batch_ms": ingest_hist.quantile(0.50) * 1e3,
+            "p99_batch_ms": ingest_hist.quantile(0.99) * 1e3,
             "cache_hit_rate": stats["cache_hits"] / max(cache_total, 1),
             "degeneracy": stats["degeneracy"],
+            "obs": shared_result("stream/mixed-workload",
+                                 update_s + query_s, delta),
         }
 
         # recovery cost vs a cold decomposition of the final graph

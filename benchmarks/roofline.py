@@ -7,16 +7,25 @@ Terms (per chip, seconds):
 
 plus MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE) / 2·N·D (serve)
 and the useful-compute ratio MODEL_FLOPS / (chips x HLO_FLOPs).
+
+``--superstep`` switches to the decomposition engine's roofline: achieved
+bytes/s of the fused superstep — numerator sourced *entirely* from the
+telemetry registry (``repro_io_bytes_read_total`` delta around one warm
+decompose, no hand math) — against a peak measured by a same-process memcpy
+probe.  The superstep is memory-bound by construction (one h-index probe per
+touched edge), so achieved/peak is the headroom number.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 
 import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+SUPERSTEP_RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _lm_model_flops(arch: str, shape: str) -> float:
@@ -137,7 +146,98 @@ def print_table(mesh: str = "single_pod_16x16"):
     return rows
 
 
+# ====================================================== superstep roofline
+def measured_memcpy_peak(nbytes: int = 1 << 27, repeats: int = 5) -> float:
+    """Achievable host copy bandwidth in bytes/s (read + write counted).
+
+    The paper's blocked I/O model charges the superstep for bytes *read*;
+    the honest peak for that charge on a host runner is a large memcpy —
+    the same streams the fused pass moves, with none of its arithmetic.
+    """
+    src = np.empty(nbytes // 8, dtype=np.float64)
+    src.fill(1.0)
+    dst = np.empty_like(src)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * nbytes / best  # bytes touched = read + write
+
+
+def superstep_roofline(quick: bool = False,
+                       backends=("numpy", "xla")) -> list[dict]:
+    """Achieved-vs-peak bytes/s of the fused superstep, registry-sourced."""
+    from repro.core.semicore import decompose
+    from repro.graph import chung_lu
+    from repro.obs import metrics as obs_metrics
+
+    n, m, block_edges = (3_000, 13_000, 512) if quick \
+        else (25_000, 110_000, 4096)
+    g = chung_lu(n, m, seed=8)
+    peak = measured_memcpy_peak(1 << 24 if quick else 1 << 27)
+    rows = []
+    for backend in backends:
+        decompose(g, "semicore*", "batch", block_edges=block_edges,
+                  backend=backend)  # warm jit caches out of the measurement
+        snap = obs_metrics.get_registry().snapshot()
+        t0 = time.perf_counter()
+        r = decompose(g, "semicore*", "batch", block_edges=block_edges,
+                      backend=backend)
+        wall = time.perf_counter() - t0
+        delta = obs_metrics.get_registry().delta(snap)
+        nbytes = obs_metrics.sum_by_name(delta, "repro_io_bytes_read_total")
+        achieved = nbytes / max(wall, 1e-9)
+        rows.append({
+            "backend": backend,
+            "algorithm": "semicore*",
+            "graph": {"n": g.n, "m": g.m, "block_edges": block_edges},
+            "wall_seconds": round(wall, 5),
+            "bytes_read": int(nbytes),
+            "passes": int(obs_metrics.sum_by_name(
+                delta, "repro_engine_passes_total")),
+            "achieved_bytes_per_s": achieved,
+            "peak_bytes_per_s": peak,
+            "roofline_fraction": achieved / peak,
+            "iterations_check": r.iterations,
+        })
+    return rows
+
+
+def print_superstep(quick: bool = False) -> list[dict]:
+    rows = superstep_roofline(quick)
+    hdr = (f"{'backend':<8} {'wall_s':>9} {'bytes_read':>12} "
+           f"{'achieved GB/s':>14} {'peak GB/s':>10} {'roofline%':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['backend']:<8} {r['wall_seconds']:>9.4f} "
+              f"{r['bytes_read']:>12,} "
+              f"{r['achieved_bytes_per_s'] / 1e9:>14.3f} "
+              f"{r['peak_bytes_per_s'] / 1e9:>10.3f} "
+              f"{100 * r['roofline_fraction']:>9.1f}%")
+    os.makedirs(SUPERSTEP_RESULTS, exist_ok=True)
+    path = os.path.join(SUPERSTEP_RESULTS, "superstep_roofline.json")
+    with open(path, "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+    return rows
+
+
 if __name__ == "__main__":
+    import argparse
     import sys
 
-    print_table(sys.argv[1] if len(sys.argv) > 1 else "single_pod_16x16")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("mesh", nargs="?", default="single_pod_16x16")
+    ap.add_argument("--superstep", action="store_true",
+                    help="registry-sourced achieved-vs-peak bytes/s of the "
+                    "fused superstep")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.superstep:
+        print_superstep(quick=args.quick)
+    else:
+        print_table(args.mesh)

@@ -39,11 +39,26 @@ REPRO_DEVICE_RESIDENT=0 REPRO_BACKEND=xla \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/bench_backends.py --check-trajectory
 
-# CI observability: render the backend x algorithm wall-clock table into the
-# workflow step summary (no-op outside GitHub Actions)
+# telemetry leg (DESIGN.md §14): run the large bench cell with tracing on,
+# emitting a Perfetto-loadable Chrome trace (superstep_trace.json), the full
+# registry in Prometheus text exposition (metrics.prom) and a markdown
+# summary (obs_summary.md).  Gates on instrumentation overhead: the traced
+# warm wall must stay within 5% (+50ms floor) of the REPRO_OBS=0 wall.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_backends.py --obs-cell
+
+# registry-sourced superstep roofline: achieved-vs-peak bytes/s where the
+# numerator is the repro_io_bytes_read_total delta, never hand math
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/roofline.py --superstep --quick
+
+# CI observability: render the backend x algorithm wall-clock table and the
+# telemetry-cell summary into the workflow step summary (no-op outside
+# GitHub Actions)
 if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_backends.py --summary >> "$GITHUB_STEP_SUMMARY"
+  cat benchmarks/results/obs_summary.md >> "$GITHUB_STEP_SUMMARY"
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick

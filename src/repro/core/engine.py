@@ -38,11 +38,13 @@ bookkeeping, not edge I/O.
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 
 import numpy as np
 
+from ..obs import metrics as _metrics, trace as _trace
 from .localcore import h_index_batch, compute_cnt_batch
 
 __all__ = [
@@ -63,6 +65,63 @@ __all__ = [
 ]
 
 BACKEND_ENV_VAR = "REPRO_BACKEND"
+
+# Registry mirrors of the pallas block-activity tallies (DESIGN.md §14);
+# incremented at the same sites as the backend's own counters (begin_pass
+# here, the pinned-mask replay in resident.py) so registry deltas reconcile
+# exactly with DecompResult.kernel_blocks_active/skipped.
+_KB_ACTIVE = _metrics.counter(
+    "repro_kernel_blocks_active_total",
+    "Pallas kernel blocks whose DMA was issued, summed over passes",
+).labels()
+_KB_SKIPPED = _metrics.counter(
+    "repro_kernel_blocks_skipped_total",
+    "Pallas kernel blocks skipped by the frontier activity mask",
+).labels()
+
+_MAINT_PROLOGUE = _metrics.histogram(
+    "repro_maintenance_cnt_prologue_seconds",
+    "Exact-cnt full-scan prologue cost of warm settles (Eq. 2 over all nodes)",
+)
+
+
+def _pass_obs(algorithm: str, backend_name: str, schedule: str = "batch"):
+    """The per-pass counter series for one (algorithm, backend, schedule):
+    (passes, frontier nodes, core updates).  Hoisted out of the superstep
+    loops so each pass costs three plain ``inc`` calls."""
+    lab = dict(algorithm=algorithm, backend=backend_name, schedule=schedule)
+    return (
+        _metrics.counter(
+            "repro_engine_passes_total",
+            "Supersteps executed (== DecompResult.iterations per run)",
+        ).labels(**lab),
+        _metrics.counter(
+            "repro_engine_frontier_nodes_total",
+            "Nodes recomputed, summed over passes (== node_computations)",
+        ).labels(**lab),
+        _metrics.counter(
+            "repro_engine_updates_total",
+            "Core-value updates, summed over passes",
+        ).labels(**lab),
+    )
+
+
+def _kernel_counts(backend) -> tuple:
+    return (getattr(backend, "kernel_blocks_active", 0),
+            getattr(backend, "kernel_blocks_skipped", 0))
+
+
+def _finish_pass_span(sp, backend, c_old_f, changed, ka0, ks0) -> None:
+    """Attach pass args shown in the Perfetto side panel: updates, h-index
+    probe depth (ceil(log2(cmax+2)) — the device backends' binary-search
+    scan count for this frontier), and pallas block activity."""
+    cmax = int(c_old_f.max()) if len(c_old_f) else 0
+    sp.set(updates=int(changed),
+           hindex_probes=int(np.ceil(np.log2(cmax + 2))) if cmax else 0)
+    ka1, ks1 = _kernel_counts(backend)
+    if (ka1 - ka0) or (ks1 - ks0):
+        sp.set(kernel_blocks_active=ka1 - ka0,
+               kernel_blocks_skipped=ks1 - ks0)
 
 
 @dataclass
@@ -585,6 +644,8 @@ class PallasBackend(DeviceBackend):
             na = int((np.cumsum(cov[:-1]) > 0).sum())
             self.kernel_blocks_active += na
             self.kernel_blocks_skipped += self.nb - na
+            _KB_ACTIVE.inc(na)
+            _KB_SKIPPED.inc(self.nb - na)
 
     def io_report(self):
         return {
@@ -909,17 +970,27 @@ def run_batch(engine, algorithm: str, backend=None, *,
     if algorithm == "semicore":
         core = engine.degrees().astype(np.int64)
         all_nodes = np.arange(n, dtype=np.int64)
+        om_p, om_f, om_u = _pass_obs("semicore", backend.name)
         while True:
             iters += 1
-            backend.begin_pass(all_nodes, core)
-            if backend.consumes_gather:
-                vals, seg_ptr, _ = planner.gather(all_nodes, core)
-            else:  # full-table backend; this driver only needs the charge
-                planner.charge_only(all_nodes)
-                vals = seg_ptr = None
-            planner.account_node_scan(0, n - 1)
-            h = backend.h_index(vals, seg_ptr, core)
-            changed = int((h != core).sum())
+            with _trace.span("superstep", cat="engine", algorithm="semicore",
+                             backend=backend.name, index=iters,
+                             frontier=n) as sp:
+                ka0, ks0 = _kernel_counts(backend)
+                backend.begin_pass(all_nodes, core)
+                if backend.consumes_gather:
+                    vals, seg_ptr, _ = planner.gather(all_nodes, core)
+                else:  # full-table backend; this driver only needs the charge
+                    planner.charge_only(all_nodes)
+                    vals = seg_ptr = None
+                planner.account_node_scan(0, n - 1)
+                h = backend.h_index(vals, seg_ptr, core)
+                changed = int((h != core).sum())
+                if sp.active:
+                    _finish_pass_span(sp, backend, core, changed, ka0, ks0)
+            om_p.inc()
+            om_f.inc(n)
+            om_u.inc(changed)
             upd_hist.append(changed)
             comp_hist.append(n)
             comp += n
@@ -932,17 +1003,28 @@ def run_batch(engine, algorithm: str, backend=None, *,
     if algorithm == "semicore+":
         core = engine.degrees().astype(np.int64)
         frontier = np.arange(n, dtype=np.int64)
+        om_p, om_f, om_u = _pass_obs("semicore+", backend.name)
         while len(frontier):
             iters += 1
-            backend.begin_pass(frontier, core)
-            if backend.consumes_gather:
-                vals, seg_ptr, nbr_flat = planner.gather(frontier, core)
-            else:  # structure only: propagation needs nbr_flat, not values
-                seg_ptr, nbr_flat = planner.gather_structure(frontier)
-                vals = None
-            planner.account_node_scan(int(frontier[0]), int(frontier[-1]))
-            h = backend.h_index(vals, seg_ptr, core[frontier])
-            changed_mask = h != core[frontier]
+            with _trace.span("superstep", cat="engine", algorithm="semicore+",
+                             backend=backend.name, index=iters,
+                             frontier=len(frontier)) as sp:
+                ka0, ks0 = _kernel_counts(backend)
+                backend.begin_pass(frontier, core)
+                if backend.consumes_gather:
+                    vals, seg_ptr, nbr_flat = planner.gather(frontier, core)
+                else:  # structure only: propagation needs nbr_flat, not values
+                    seg_ptr, nbr_flat = planner.gather_structure(frontier)
+                    vals = None
+                planner.account_node_scan(int(frontier[0]), int(frontier[-1]))
+                h = backend.h_index(vals, seg_ptr, core[frontier])
+                changed_mask = h != core[frontier]
+                if sp.active:
+                    _finish_pass_span(sp, backend, core[frontier],
+                                      changed_mask.sum(), ka0, ks0)
+            om_p.inc()
+            om_f.inc(len(frontier))
+            om_u.inc(int(changed_mask.sum()))
             comp += len(frontier)
             comp_hist.append(len(frontier))
             upd_hist.append(int(changed_mask.sum()))
@@ -964,17 +1046,28 @@ def run_batch(engine, algorithm: str, backend=None, *,
             core = np.asarray(core, dtype=np.int64).copy()
             cnt = np.asarray(cnt, dtype=np.int64).copy()
         frontier = np.flatnonzero((cnt < core) & (core > 0))
+        om_p, om_f, om_u = _pass_obs("semicore*", backend.name)
         while len(frontier):
             iters += 1
-            backend.begin_pass(frontier, core)
-            if backend.consumes_gather:
-                vals_old, seg_ptr, nbr_flat = planner.gather(frontier, core)
-            else:  # structure only: push rule needs nbr_flat, not values
-                seg_ptr, nbr_flat = planner.gather_structure(frontier)
-                vals_old = None
-            planner.account_node_scan(int(frontier[0]), int(frontier[-1]))
-            c_old_f = core[frontier].copy()
-            h = backend.h_index(vals_old, seg_ptr, c_old_f)
+            with _trace.span("superstep", cat="engine", algorithm="semicore*",
+                             backend=backend.name, index=iters,
+                             frontier=len(frontier)) as sp:
+                ka0, ks0 = _kernel_counts(backend)
+                backend.begin_pass(frontier, core)
+                if backend.consumes_gather:
+                    vals_old, seg_ptr, nbr_flat = planner.gather(frontier, core)
+                else:  # structure only: push rule needs nbr_flat, not values
+                    seg_ptr, nbr_flat = planner.gather_structure(frontier)
+                    vals_old = None
+                planner.account_node_scan(int(frontier[0]), int(frontier[-1]))
+                c_old_f = core[frontier].copy()
+                h = backend.h_index(vals_old, seg_ptr, c_old_f)
+                if sp.active:
+                    _finish_pass_span(sp, backend, c_old_f,
+                                      (h != c_old_f).sum(), ka0, ks0)
+            om_p.inc()
+            om_f.inc(len(frontier))
+            om_u.inc(int((h != c_old_f).sum()))
             comp += len(frontier)
             comp_hist.append(len(frontier))
             upd_hist.append(int((h != c_old_f).sum()))
@@ -1025,14 +1118,18 @@ def warm_settle(engine, core0: np.ndarray, applied_inserts: int,
                                 superstep_chunk=superstep_chunk)
     backend.bind(engine.planner)
     all_nodes = np.arange(n, dtype=np.int64)
-    backend.begin_pass(all_nodes, warm)
-    if backend.consumes_gather:
-        vals, seg_ptr, _ = engine.planner.gather(all_nodes, warm)
-    else:  # full-table backend scans its own resident copy
-        engine.planner.charge_only(all_nodes)
-        vals = seg_ptr = None
-    engine.planner.account_node_scan(0, n - 1)
-    cnt = backend.compute_cnt(vals, seg_ptr, warm)
+    t0 = time.perf_counter()
+    with _trace.span("cnt_prologue", cat="maintenance",
+                     backend=backend.name, nodes=n):
+        backend.begin_pass(all_nodes, warm)
+        if backend.consumes_gather:
+            vals, seg_ptr, _ = engine.planner.gather(all_nodes, warm)
+        else:  # full-table backend scans its own resident copy
+            engine.planner.charge_only(all_nodes)
+            vals = seg_ptr = None
+        engine.planner.account_node_scan(0, n - 1)
+        cnt = backend.compute_cnt(vals, seg_ptr, warm)
+    _MAINT_PROLOGUE.observe(time.perf_counter() - t0)
     return run_batch(engine, "semicore*", backend, core=warm, cnt=cnt,
                      rebind=False)
 

@@ -18,16 +18,35 @@ this reading the final cnt values are exactly Eq. 2 w.r.t. the new cores
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
+from ..obs import metrics as _metrics, trace as _trace
 from .engine import ComputeBackend, resolve_backend, warm_settle
 from .semicore import HostEngine
 
 __all__ = ["MaintStats", "BatchMaintStats", "CoreMaintainer"]
+
+# apply_batch settle latency, labeled by path: "per-edge" is the paper's
+# seq maintenance (Algs. 6-8), "batch-settle" the warm_settle discipline of
+# the device backends (DESIGN.md §14; the exact-cnt prologue cost is the
+# separate repro_maintenance_cnt_prologue_seconds histogram in engine.py)
+_SETTLE_SECONDS = _metrics.histogram(
+    "repro_maintenance_settle_seconds",
+    "apply_batch settle latency per micro-batch",
+)
+_BATCHES = _metrics.counter(
+    "repro_maintenance_batches_total",
+    "Micro-batches applied by CoreMaintainer.apply_batch",
+)
+_UPDATES_APPLIED = _metrics.counter(
+    "repro_maintenance_updates_applied_total",
+    "Structural edge updates applied (deletes + inserts, no-ops excluded)",
+)
 
 _PHI, _Q, _CIRC, _CROSS = 0, 1, 2, 3
 
@@ -140,24 +159,35 @@ class CoreMaintainer:
         snap = self._io_snapshot()
         core0 = self.core.copy()
         comp = iters = nd = ni = noop = 0
-        for u, v in deletes:
-            try:
-                s = self.delete_edge(int(u), int(v))
-            except KeyError:
-                noop += 1
-                continue
-            comp += s.node_computations
-            iters += s.iterations
-            nd += 1
-        for u, v in inserts:
-            try:
-                s = self.insert_edge(int(u), int(v), algorithm=insert_algorithm)
-            except KeyError:
-                noop += 1
-                continue
-            comp += s.node_computations
-            iters += s.iterations
-            ni += 1
+        t0 = time.perf_counter()
+        with _trace.span("maintenance.apply_batch", cat="maintenance",
+                         path="per-edge", deletes=len(deletes),
+                         inserts=len(inserts)) as sp:
+            for u, v in deletes:
+                try:
+                    s = self.delete_edge(int(u), int(v))
+                except KeyError:
+                    noop += 1
+                    continue
+                comp += s.node_computations
+                iters += s.iterations
+                nd += 1
+            for u, v in inserts:
+                try:
+                    s = self.insert_edge(int(u), int(v),
+                                         algorithm=insert_algorithm)
+                except KeyError:
+                    noop += 1
+                    continue
+                comp += s.node_computations
+                iters += s.iterations
+                ni += 1
+            if sp.active:
+                sp.set(applied=nd + ni, noops=noop)
+        _SETTLE_SECONDS.labels(path="per-edge").observe(
+            time.perf_counter() - t0)
+        _BATCHES.labels(path="per-edge").inc()
+        _UPDATES_APPLIED.labels(path="per-edge").inc(nd + ni)
         io = self._io_delta(snap)
         return BatchMaintStats(
             algorithm=f"batch({insert_algorithm})",
@@ -179,22 +209,32 @@ class CoreMaintainer:
         snap = self._io_snapshot()
         core0 = self.core.copy()
         nd = ni = noop = 0
-        for u, v in deletes:
-            if self.bg.delete_edge(int(u), int(v)):
-                nd += 1
-            else:
-                noop += 1
-        for u, v in inserts:
-            if self.bg.insert_edge(int(u), int(v)):
-                ni += 1
-            else:
-                noop += 1
-        comp = iters = 0
-        if nd or ni:
-            r = warm_settle(self.engine, self.core, ni, self.backend,
-                            superstep_chunk=self.superstep_chunk)
-            self.core, self.cnt = r.core, r.cnt
-            comp, iters = r.node_computations, r.iterations
+        t0 = time.perf_counter()
+        with _trace.span("maintenance.batch_settle", cat="maintenance",
+                         path="batch-settle", backend=self.backend.name,
+                         deletes=len(deletes), inserts=len(inserts)) as sp:
+            for u, v in deletes:
+                if self.bg.delete_edge(int(u), int(v)):
+                    nd += 1
+                else:
+                    noop += 1
+            for u, v in inserts:
+                if self.bg.insert_edge(int(u), int(v)):
+                    ni += 1
+                else:
+                    noop += 1
+            comp = iters = 0
+            if nd or ni:
+                r = warm_settle(self.engine, self.core, ni, self.backend,
+                                superstep_chunk=self.superstep_chunk)
+                self.core, self.cnt = r.core, r.cnt
+                comp, iters = r.node_computations, r.iterations
+            if sp.active:
+                sp.set(applied=nd + ni, noops=noop, iterations=iters)
+        _SETTLE_SECONDS.labels(path="batch-settle").observe(
+            time.perf_counter() - t0)
+        _BATCHES.labels(path="batch-settle").inc()
+        _UPDATES_APPLIED.labels(path="batch-settle").inc(nd + ni)
         io = self._io_delta(snap)
         return BatchMaintStats(
             algorithm=f"batch-settle({self.backend.name})",

@@ -40,10 +40,16 @@ engine's per-shard superstep consumes (``distributed.py``).
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass
 from functools import lru_cache
 
 import numpy as np
+
+from ..obs import trace as _trace
+# registry series shared with the per-pass path: the replay increments the
+# exact counters engine.run_batch / PallasBackend.begin_pass would have
+from .engine import _KB_ACTIVE, _KB_SKIPPED, _MAINT_PROLOGUE, _pass_obs
 
 __all__ = [
     "ResidentStructure",
@@ -419,6 +425,8 @@ def _replay_kernel_blocks(tally: dict | None, rs: ResidentStructure,
     na = int((np.cumsum(cov[:-1]) > 0).sum())
     tally["kernel_blocks_active"] += na
     tally["kernel_blocks_skipped"] += nb - na
+    _KB_ACTIVE.inc(na)
+    _KB_SKIPPED.inc(nb - na)
 
 
 def _replay_pass(planner, frontier: np.ndarray, tally: dict | None,
@@ -477,6 +485,7 @@ def run_resident(engine, algorithm: str, backend, *,
     tally = ({"kernel_blocks_active": 0, "kernel_blocks_skipped": 0}
              if kind == "pallas" else None)
     chunk = chunk_len(superstep_chunk)
+    om = _pass_obs(algorithm, backend.name)
 
     warm = core is not None
     if warm:
@@ -517,16 +526,20 @@ def run_resident(engine, algorithm: str, backend, *,
         if initial_cnt_scan:
             # warm_settle prologue: one accounted full scan recomputes cnt
             # exactly (Eq. 2) w.r.t. the warm upper bound — on device
-            planner.charge_only(all_nodes)
-            planner.account_node_scan(0, n - 1)
-            _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
-            if rs.E:
-                counts_all = _counts_all_fn(kind, be, interpret)
-                cnt_j = counts_all(core_j, rs.nbr_j, rs.rows_j,
-                                   rs.segptr_j, num_segments=n)
-            else:
-                cnt_j = jnp.zeros((n,), jnp.int32)
-            cnt = np.asarray(cnt_j, dtype=np.int64)
+            t0 = time.perf_counter()
+            with _trace.span("cnt_prologue", cat="maintenance",
+                             backend=backend.name, nodes=n):
+                planner.charge_only(all_nodes)
+                planner.account_node_scan(0, n - 1)
+                _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+                if rs.E:
+                    counts_all = _counts_all_fn(kind, be, interpret)
+                    cnt_j = counts_all(core_j, rs.nbr_j, rs.rows_j,
+                                       rs.segptr_j, num_segments=n)
+                else:
+                    cnt_j = jnp.zeros((n,), jnp.int32)
+                cnt = np.asarray(cnt_j, dtype=np.int64)
+            _MAINT_PROLOGUE.observe(time.perf_counter() - t0)
         elif warm:
             cnt = np.asarray(cnt, dtype=np.int64).copy()
             cnt_j = jnp.asarray(cnt.astype(np.int32))
@@ -543,6 +556,9 @@ def run_resident(engine, algorithm: str, backend, *,
                 upd_hist.append(int((core[f] != 0).sum()))
                 comp_hist.append(len(f))
                 _replay_pass(planner, f, tally, rs, be, nb)
+                om[0].inc()
+                om[1].inc(len(f))
+                om[2].inc(int((core[f] != 0).sum()))
                 core[f] = 0
                 cnt[f] = 0
             return result(core, cnt)
@@ -552,13 +568,18 @@ def run_resident(engine, algorithm: str, backend, *,
         fn = _chunk_fns(kind, be, interpret, algorithm)
         active_j = jnp.asarray(active0)
         while True:
-            core_j, cnt_j, active_j, done, fronts, upds, ran = fn(
-                core_j, cnt_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                num_probes=num_probes, num_segments=n, chunk=chunk)
-            iters, comp = _replay_chunk(
-                planner, rs, be, nb, tally, np.asarray(fronts),
-                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
-                iters, comp)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore*", backend=backend.name,
+                             chunk=chunk) as sp:
+                core_j, cnt_j, active_j, done, fronts, upds, ran = fn(
+                    core_j, cnt_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                iters, comp = _replay_chunk(
+                    planner, rs, be, nb, tally, np.asarray(fronts),
+                    np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                    iters, comp, om, "semicore*")
+                if sp.active:
+                    sp.set(passes_run=int(np.asarray(ran).sum()))
             if bool(done):
                 break
         return result(core_j, cnt_j)
@@ -575,6 +596,8 @@ def run_resident(engine, algorithm: str, backend, *,
             planner.charge_only(all_nodes)
             planner.account_node_scan(0, n - 1)
             _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+            om[0].inc()
+            om[1].inc(n)
         return result(core, None)
 
     if algorithm == "semicore":
@@ -582,21 +605,32 @@ def run_resident(engine, algorithm: str, backend, *,
         fn = _chunk_fns(kind, be, interpret, algorithm)
         done_j = jnp.asarray(False)
         while True:
-            core_j, done_j, upds, ran = fn(
-                core_j, done_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                num_probes=num_probes, num_segments=n, chunk=chunk)
-            ran = np.asarray(ran)
-            upds = np.asarray(upds)
-            for k in range(len(ran)):
-                if not ran[k]:
-                    break
-                iters += 1
-                comp += n
-                upd_hist.append(int(upds[k]))
-                comp_hist.append(n)
-                planner.charge_only(all_nodes)
-                planner.account_node_scan(0, n - 1)
-                _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore", backend=backend.name,
+                             chunk=chunk) as sp:
+                core_j, done_j, upds, ran = fn(
+                    core_j, done_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                ran = np.asarray(ran)
+                upds = np.asarray(upds)
+                for k in range(len(ran)):
+                    if not ran[k]:
+                        break
+                    iters += 1
+                    comp += n
+                    upd_hist.append(int(upds[k]))
+                    comp_hist.append(n)
+                    planner.charge_only(all_nodes)
+                    planner.account_node_scan(0, n - 1)
+                    _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
+                    om[0].inc()
+                    om[1].inc(n)
+                    om[2].inc(int(upds[k]))
+                    _trace.instant("superstep.replay", cat="engine",
+                                   algorithm="semicore", index=iters,
+                                   frontier=n, updates=int(upds[k]))
+                if sp.active:
+                    sp.set(passes_run=int(ran.sum()))
             if bool(done_j):
                 break
         return result(core_j, None)
@@ -605,13 +639,18 @@ def run_resident(engine, algorithm: str, backend, *,
         fn = _chunk_fns(kind, be, interpret, algorithm)
         active_j = jnp.ones((n,), jnp.bool_)
         while True:
-            core_j, active_j, done, fronts, upds, ran = fn(
-                core_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                num_probes=num_probes, num_segments=n, chunk=chunk)
-            iters, comp = _replay_chunk(
-                planner, rs, be, nb, tally, np.asarray(fronts),
-                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
-                iters, comp)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore+", backend=backend.name,
+                             chunk=chunk) as sp:
+                core_j, active_j, done, fronts, upds, ran = fn(
+                    core_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
+                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                iters, comp = _replay_chunk(
+                    planner, rs, be, nb, tally, np.asarray(fronts),
+                    np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                    iters, comp, om, "semicore+")
+                if sp.active:
+                    sp.set(passes_run=int(np.asarray(ran).sum()))
             if bool(done):
                 break
         return result(core_j, None)
@@ -620,8 +659,13 @@ def run_resident(engine, algorithm: str, backend, *,
 
 
 def _replay_chunk(planner, rs, be, nb, tally, fronts, upds, ran,
-                  upd_hist, comp_hist, iters, comp):
-    """Replay the planner charges for the executed passes of one chunk."""
+                  upd_hist, comp_hist, iters, comp, om=None, algorithm=""):
+    """Replay the planner charges for the executed passes of one chunk.
+
+    ``om`` is the (passes, frontier, updates) counter triple from
+    :func:`engine._pass_obs`; the replayed per-pass markers are emitted as
+    trace instants from the same pinned frontier masks the planner charges
+    come from, so tracing never perturbs the bit-identical guarantee."""
     for k in range(len(ran)):
         if not ran[k]:
             break
@@ -631,6 +675,13 @@ def _replay_chunk(planner, rs, be, nb, tally, fronts, upds, ran,
         upd_hist.append(int(upds[k]))
         comp_hist.append(int(len(frontier)))
         _replay_pass(planner, frontier, tally, rs, be, nb)
+        if om is not None:
+            om[0].inc()
+            om[1].inc(len(frontier))
+            om[2].inc(int(upds[k]))
+        _trace.instant("superstep.replay", cat="engine", algorithm=algorithm,
+                       index=iters, frontier=int(len(frontier)),
+                       updates=int(upds[k]))
     return iters, comp
 
 
@@ -1002,6 +1053,7 @@ def run_sharded(engine, algorithm: str, backend, *,
     ss = backend.bind_resident(planner)
     chunk = chunk_len(superstep_chunk)
     unroll = os.environ.get("REPRO_UNROLL_SCANS") == "1"
+    om = _pass_obs(algorithm, backend.name)
 
     warm = core is not None
     if warm:
@@ -1072,15 +1124,19 @@ def run_sharded(engine, algorithm: str, backend, *,
             # warm_settle prologue: one accounted full scan recomputes cnt
             # exactly (Eq. 2) w.r.t. the warm upper bound — on the mesh,
             # against the bound sharded structure
-            planner.charge_only(all_nodes)
-            planner.account_node_scan(0, n - 1)
-            if ss.E:
-                counts = _shard_counts_fn(ss.mesh, n)
-                cnt_lj = counts(core_j, ss.dst_j, ss.rows_j, ss.emask_j,
-                                ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
-                cnt = globalize(cnt_lj, 0, np.int64)
-            else:
-                cnt = np.zeros(n, dtype=np.int64)
+            t0 = time.perf_counter()
+            with _trace.span("cnt_prologue", cat="maintenance",
+                             backend=backend.name, nodes=n):
+                planner.charge_only(all_nodes)
+                planner.account_node_scan(0, n - 1)
+                if ss.E:
+                    counts = _shard_counts_fn(ss.mesh, n)
+                    cnt_lj = counts(core_j, ss.dst_j, ss.rows_j, ss.emask_j,
+                                    ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                    cnt = globalize(cnt_lj, 0, np.int64)
+                else:
+                    cnt = np.zeros(n, dtype=np.int64)
+            _MAINT_PROLOGUE.observe(time.perf_counter() - t0)
         elif warm:
             cnt = np.asarray(cnt, dtype=np.int64).copy()
         else:
@@ -1095,6 +1151,9 @@ def run_sharded(engine, algorithm: str, backend, *,
                 upd_hist.append(int((core[f] != 0).sum()))
                 comp_hist.append(len(f))
                 _replay_pass(planner, f, None, ss, 0, 0)
+                om[0].inc()
+                om[1].inc(len(f))
+                om[2].inc(int((core[f] != 0).sum()))
                 core[f] = 0
                 cnt[f] = 0
             return result(core, cnt)
@@ -1105,13 +1164,18 @@ def run_sharded(engine, algorithm: str, backend, *,
         act_lj = localize(active0, False, bool)
         nact = np.int32(active0.sum())
         while True:
-            core_j, cnt_lj, act_lj, nact, fronts, upds, ran = budget_fn()(
-                core_j, cnt_lj, act_lj, nact, ss.dst_j, ss.rows_j,
-                ss.emask_j, ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
-            iters, comp = _replay_chunk(
-                planner, ss, 0, 0, None, front_masks(fronts),
-                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
-                iters, comp)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore*", backend=backend.name,
+                             shards=ss.S, chunk=chunk) as sp:
+                core_j, cnt_lj, act_lj, nact, fronts, upds, ran = budget_fn()(
+                    core_j, cnt_lj, act_lj, nact, ss.dst_j, ss.rows_j,
+                    ss.emask_j, ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                iters, comp = _replay_chunk(
+                    planner, ss, 0, 0, None, front_masks(fronts),
+                    np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                    iters, comp, om, "semicore*")
+                if sp.active:
+                    sp.set(passes_run=int(np.asarray(ran).sum()))
             if int(nact) == 0 or budget_hit():
                 break
         return result(core_j, globalize(cnt_lj, 0, np.int64))
@@ -1127,26 +1191,39 @@ def run_sharded(engine, algorithm: str, backend, *,
             comp_hist.append(n)
             planner.charge_only(all_nodes)
             planner.account_node_scan(0, n - 1)
+            om[0].inc()
+            om[1].inc(n)
         return result(core, None)
 
     if algorithm == "semicore":
         # every node, every pass — the final no-update pass included
         done_j = jnp.asarray(False)
         while True:
-            core_j, done_j, upds, ran = budget_fn()(
-                core_j, done_j, ss.dst_j, ss.rows_j, ss.emask_j, ss.lseg_j,
-                ss.owned_ids_j, ss.owned_mask_j)
-            ran = np.asarray(ran)
-            upds = np.asarray(upds)
-            for k in range(len(ran)):
-                if not ran[k]:
-                    break
-                iters += 1
-                comp += n
-                upd_hist.append(int(upds[k]))
-                comp_hist.append(n)
-                planner.charge_only(all_nodes)
-                planner.account_node_scan(0, n - 1)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore", backend=backend.name,
+                             shards=ss.S, chunk=chunk) as sp:
+                core_j, done_j, upds, ran = budget_fn()(
+                    core_j, done_j, ss.dst_j, ss.rows_j, ss.emask_j,
+                    ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                ran = np.asarray(ran)
+                upds = np.asarray(upds)
+                for k in range(len(ran)):
+                    if not ran[k]:
+                        break
+                    iters += 1
+                    comp += n
+                    upd_hist.append(int(upds[k]))
+                    comp_hist.append(n)
+                    planner.charge_only(all_nodes)
+                    planner.account_node_scan(0, n - 1)
+                    om[0].inc()
+                    om[1].inc(n)
+                    om[2].inc(int(upds[k]))
+                    _trace.instant("superstep.replay", cat="engine",
+                                   algorithm="semicore", index=iters,
+                                   frontier=n, updates=int(upds[k]))
+                if sp.active:
+                    sp.set(passes_run=int(ran.sum()))
             if bool(done_j) or budget_hit():
                 break
         return result(core_j, None)
@@ -1155,13 +1232,18 @@ def run_sharded(engine, algorithm: str, backend, *,
         act_lj = localize(np.ones(n, dtype=bool), False, bool)
         nact = np.int32(n)
         while True:
-            core_j, act_lj, nact, fronts, upds, ran = budget_fn()(
-                core_j, act_lj, nact, ss.dst_j, ss.rows_j, ss.emask_j,
-                ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
-            iters, comp = _replay_chunk(
-                planner, ss, 0, 0, None, front_masks(fronts),
-                np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
-                iters, comp)
+            with _trace.span("resident.chunk", cat="engine",
+                             algorithm="semicore+", backend=backend.name,
+                             shards=ss.S, chunk=chunk) as sp:
+                core_j, act_lj, nact, fronts, upds, ran = budget_fn()(
+                    core_j, act_lj, nact, ss.dst_j, ss.rows_j, ss.emask_j,
+                    ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                iters, comp = _replay_chunk(
+                    planner, ss, 0, 0, None, front_masks(fronts),
+                    np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
+                    iters, comp, om, "semicore+")
+                if sp.active:
+                    sp.set(passes_run=int(np.asarray(ran).sum()))
             if int(nact) == 0 or budget_hit():
                 break
         return result(core_j, None)

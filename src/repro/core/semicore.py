@@ -37,7 +37,9 @@ import numpy as np
 
 from ..graph.storage import CSRGraph, BlockReader, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
-from .engine import BACKEND_ENV_VAR, DecompResult, PassPlanner, run_batch
+from ..obs import trace as _trace
+from .engine import (BACKEND_ENV_VAR, DecompResult, PassPlanner, _pass_obs,
+                     run_batch)
 from .localcore import local_core
 
 __all__ = ["DecompResult", "HostEngine", "decompose"]
@@ -125,20 +127,29 @@ class HostEngine:
         iters = 0
         upd_hist, comp_hist = [], []
         update = True
+        om = _pass_obs("semicore", "numpy", "seq")
         while update:
             update = False
             iters += 1
             upd = 0
-            self.reader.account_node_table_scan(0, n - 1)
-            for v in range(n):
-                nbrs = self.nbrs(v)
-                c_old = int(core[v])
-                c_new = local_core(c_old, core[nbrs])
-                comp += 1
-                if c_new != c_old:
-                    core[v] = c_new
-                    update = True
-                    upd += 1
+            with _trace.span("superstep", cat="engine", algorithm="semicore",
+                             backend="numpy", schedule="seq",
+                             index=iters) as sp:
+                self.reader.account_node_table_scan(0, n - 1)
+                for v in range(n):
+                    nbrs = self.nbrs(v)
+                    c_old = int(core[v])
+                    c_new = local_core(c_old, core[nbrs])
+                    comp += 1
+                    if c_new != c_old:
+                        core[v] = c_new
+                        update = True
+                        upd += 1
+                if sp.active:
+                    sp.set(computed=n, updates=upd)
+            om[0].inc()
+            om[1].inc(n)
+            om[2].inc(upd)
             upd_hist.append(upd)
             comp_hist.append(n)
         return self._result(core, None, iters, comp, "semicore", "seq", upd_hist, comp_hist)
@@ -159,6 +170,7 @@ class HostEngine:
         comp, iters = 0, 0
         upd_hist, comp_hist = [], []
         update = True
+        om = _pass_obs("semicore+", "numpy", "seq")
         while update:
             update = False
             iters += 1
@@ -166,28 +178,36 @@ class HostEngine:
             upd = cpt = 0
             scan_lo = vmin
             v = vmin
-            while v <= vmax:
-                if active[v]:
-                    active[v] = False
-                    nbrs = self.nbrs(v)
-                    c_old = int(core[v])
-                    c_new = local_core(c_old, core[nbrs])
-                    cpt += 1
-                    if c_new != c_old:
-                        core[v] = c_new
-                        upd += 1
-                        for u in nbrs:
-                            active[u] = True
-                            u = int(u)
-                            # UpdateRange (Alg. 4 lines 17-21)
-                            if u > vmax:
-                                vmax = u
-                            if u < v:
-                                update = True
-                                nvmin = min(nvmin, u)
-                                nvmax = max(nvmax, u)
-                v += 1
-            self.reader.account_node_table_scan(scan_lo, vmax)
+            with _trace.span("superstep", cat="engine", algorithm="semicore+",
+                             backend="numpy", schedule="seq",
+                             index=iters) as sp:
+                while v <= vmax:
+                    if active[v]:
+                        active[v] = False
+                        nbrs = self.nbrs(v)
+                        c_old = int(core[v])
+                        c_new = local_core(c_old, core[nbrs])
+                        cpt += 1
+                        if c_new != c_old:
+                            core[v] = c_new
+                            upd += 1
+                            for u in nbrs:
+                                active[u] = True
+                                u = int(u)
+                                # UpdateRange (Alg. 4 lines 17-21)
+                                if u > vmax:
+                                    vmax = u
+                                if u < v:
+                                    update = True
+                                    nvmin = min(nvmin, u)
+                                    nvmax = max(nvmax, u)
+                    v += 1
+                self.reader.account_node_table_scan(scan_lo, vmax)
+                if sp.active:
+                    sp.set(computed=cpt, updates=upd)
+            om[0].inc()
+            om[1].inc(cpt)
+            om[2].inc(upd)
             vmin, vmax = nvmin, nvmax
             upd_hist.append(upd)
             comp_hist.append(cpt)
@@ -228,6 +248,7 @@ class HostEngine:
         comp, iters = 0, 0
         upd_hist, comp_hist = [], []
         update = True
+        om = _pass_obs("semicore*", "numpy", "seq")
         while update:
             update = False
             iters += 1
@@ -235,34 +256,42 @@ class HostEngine:
             upd = cpt = 0
             scan_lo = vmin
             v = vmin
-            while v <= vmax:
-                if cnt[v] < core[v]:
-                    nbrs = self.nbrs(v)
-                    c_old = int(core[v])
-                    nbr_cores = core[nbrs]
-                    c_new = local_core(c_old, nbr_cores)
-                    cpt += 1
-                    if c_new != c_old:
-                        upd += 1
-                    core[v] = c_new
-                    # ComputeCnt (Eq. 2)
-                    cnt[v] = int((nbr_cores >= c_new).sum())
-                    # UpdateNbrCnt: push decrements into (c_new, c_old]
-                    push = nbrs[(nbr_cores > c_new) & (nbr_cores <= c_old)]
-                    if len(push):
-                        np.subtract.at(cnt, push, 1)
-                    # UpdateRange over now-deficient neighbors
-                    for u in nbrs:
-                        u = int(u)
-                        if cnt[u] < core[u]:
-                            if u > vmax:
-                                vmax = u
-                            if u < v:
-                                update = True
-                                nvmin = min(nvmin, u)
-                                nvmax = max(nvmax, u)
-                v += 1
-            self.reader.account_node_table_scan(scan_lo, vmax)
+            with _trace.span("superstep", cat="engine", algorithm="semicore*",
+                             backend="numpy", schedule="seq",
+                             index=iters) as sp:
+                while v <= vmax:
+                    if cnt[v] < core[v]:
+                        nbrs = self.nbrs(v)
+                        c_old = int(core[v])
+                        nbr_cores = core[nbrs]
+                        c_new = local_core(c_old, nbr_cores)
+                        cpt += 1
+                        if c_new != c_old:
+                            upd += 1
+                        core[v] = c_new
+                        # ComputeCnt (Eq. 2)
+                        cnt[v] = int((nbr_cores >= c_new).sum())
+                        # UpdateNbrCnt: push decrements into (c_new, c_old]
+                        push = nbrs[(nbr_cores > c_new) & (nbr_cores <= c_old)]
+                        if len(push):
+                            np.subtract.at(cnt, push, 1)
+                        # UpdateRange over now-deficient neighbors
+                        for u in nbrs:
+                            u = int(u)
+                            if cnt[u] < core[u]:
+                                if u > vmax:
+                                    vmax = u
+                                if u < v:
+                                    update = True
+                                    nvmin = min(nvmin, u)
+                                    nvmax = max(nvmax, u)
+                    v += 1
+                self.reader.account_node_table_scan(scan_lo, vmax)
+                if sp.active:
+                    sp.set(computed=cpt, updates=upd)
+            om[0].inc()
+            om[1].inc(cpt)
+            om[2].inc(upd)
             vmin, vmax = nvmin, nvmax
             upd_hist.append(upd)
             comp_hist.append(cpt)

@@ -29,12 +29,38 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+
 __all__ = [
     "CSRGraph",
     "BlockReader",
     "paper_example_graph",
     "DEFAULT_BLOCK_EDGES",
 ]
+
+# Registry mirrors of the paper's I/O accounting (DESIGN.md §14).  Incremented
+# at the same source lines as the reader's own counters so a registry delta
+# around any run reconciles exactly with its DecompResult / reader fields.
+_IO_READS = _metrics.counter(
+    "repro_io_edge_block_reads_total",
+    "Edge-table block read I/Os under the paper's blocked access model",
+).labels()
+_IO_HITS = _metrics.counter(
+    "repro_io_edge_block_pool_hits_total",
+    "Edge-table block reads answered from a resident buffer-pool block",
+).labels()
+_IO_EVICTIONS = _metrics.counter(
+    "repro_io_edge_block_evictions_total",
+    "LRU buffer-pool evictions of edge-table blocks",
+).labels()
+_IO_NODE_READS = _metrics.counter(
+    "repro_io_node_table_reads_total",
+    "Node-table block read I/Os (sequential node scans)",
+).labels()
+_IO_BYTES = _metrics.counter(
+    "repro_io_bytes_read_total",
+    "Bytes read under the blocked I/O model (edge + node table)",
+).labels()
 
 # 4096 edges * 4 bytes = 16 KiB per block: one DMA/disk-friendly tile.
 DEFAULT_BLOCK_EDGES = 4096
@@ -236,11 +262,15 @@ class BlockReader:
         if block in pool:
             pool.move_to_end(block)
             self.hits += 1
+            _IO_HITS.inc()
             return
         self.reads += 1
+        _IO_READS.inc()
+        _IO_BYTES.inc(self.block_edges * 4)
         pool[block] = None
         while len(pool) > self.pool_blocks:
             pool.popitem(last=False)
+            _IO_EVICTIONS.inc()
 
     def charge_pass(self, blocks: np.ndarray) -> None:
         """Account one batch-schedule pass touching ``blocks`` (distinct,
@@ -267,6 +297,8 @@ class BlockReader:
         k = len(blocks)
         if self.pool_blocks == 1:
             self.reads += k
+            _IO_READS.inc(k)
+            _IO_BYTES.inc(k * self.block_edges * 4)
             return
         if k == 0:
             return
@@ -289,12 +321,19 @@ class BlockReader:
                 seen.append(rho)
         self.reads += k - hits
         self.hits += hits
+        _IO_READS.inc(k - hits)
+        _IO_HITS.inc(hits)
+        _IO_BYTES.inc((k - hits) * self.block_edges * 4)
         # post-pass pool: the P most recently touched distinct blocks =
         # untouched residents (old recency order) then the pass tail
         if len(resident):
             untouched = resident[~np.isin(resident, blocks)]
         else:
             untouched = resident
+        # evictions a per-block LRU simulation would have made this pass:
+        # misses minus the pool-size growth
+        end_size = min(len(untouched) + k, P)
+        _IO_EVICTIONS.inc((k - hits) - (end_size - len(resident)))
         pool.clear()
         for b in untouched[max(0, len(untouched) + k - P):].tolist():
             pool[b] = None
@@ -317,7 +356,10 @@ class BlockReader:
         if v_hi < v_lo:
             return
         span = v_hi - v_lo + 1
-        self.node_table_reads += -(-span // self._node_entries_per_block)
+        blocks = -(-span // self._node_entries_per_block)
+        self.node_table_reads += blocks
+        _IO_NODE_READS.inc(blocks)
+        _IO_BYTES.inc(blocks * self.block_edges * 4)
 
 
 def paper_example_graph() -> CSRGraph:

@@ -1,0 +1,62 @@
+"""Unified telemetry for the repro: metrics registry + Chrome-trace spans.
+
+See DESIGN.md §14.  Always-on process-local counters/gauges/histograms with a
+``REPRO_OBS=0`` kill switch, plus an opt-in span timeline loadable in
+Perfetto.  Zero third-party dependencies; safe to import from any layer.
+"""
+from .metrics import (  # noqa: F401
+    OBS_ENV_VAR,
+    DEFAULT_TIME_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    counter,
+    gauge,
+    get_registry,
+    histogram,
+    obs_enabled,
+    sum_by_name,
+)
+from .trace import (  # noqa: F401
+    TRACE_ENV_VAR,
+    Span,
+    TraceCollector,
+    clear_trace,
+    get_collector,
+    instant,
+    save_trace,
+    span,
+    start_trace,
+    stop_trace,
+    tracing_active,
+)
+from .bench import OBS_BENCH_SCHEMA, shared_result  # noqa: F401
+
+__all__ = [
+    "OBS_ENV_VAR",
+    "TRACE_ENV_VAR",
+    "OBS_BENCH_SCHEMA",
+    "DEFAULT_TIME_BUCKETS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "TraceCollector",
+    "counter",
+    "gauge",
+    "histogram",
+    "get_registry",
+    "get_collector",
+    "obs_enabled",
+    "sum_by_name",
+    "shared_result",
+    "span",
+    "instant",
+    "start_trace",
+    "stop_trace",
+    "save_trace",
+    "clear_trace",
+    "tracing_active",
+]

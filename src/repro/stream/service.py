@@ -34,10 +34,74 @@ from ..core.maintenance import CoreMaintainer
 from ..core.semicore import HostEngine
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
+from ..obs import metrics as _metrics, trace as _trace
 from .admission import AdmittedBatch, admit_batch
 from .wal import SnapshotStore, WriteAheadLog
 
-__all__ = ["EpochView", "BatchStats", "RecoveryStats", "CoreService"]
+__all__ = [
+    "EpochView", "BatchStats", "RecoveryStats", "CoreService",
+    "Watermarked", "WatermarkedArray",
+]
+
+# Service-level instrumentation (DESIGN.md §14).  Per-kind query series are
+# hoisted once at import so the hot query path pays one perf_counter pair and
+# two attribute bumps, nothing else.
+_INGEST_SECONDS = _metrics.histogram(
+    "repro_service_ingest_seconds",
+    "End-to-end micro-batch ingest latency (admit + WAL + apply + publish)",
+)
+_INGESTS = _metrics.counter(
+    "repro_service_batches_total", "Micro-batches ingested").labels()
+_QUERY_SECONDS = _metrics.histogram(
+    "repro_service_query_seconds", "Query latency by kind")
+_QUERIES = _metrics.counter(
+    "repro_service_queries_total", "Queries served by kind")
+_EPOCH_GAUGE = _metrics.gauge(
+    "repro_service_epoch", "Committed epoch watermark").labels()
+_BUFFERED_GAUGE = _metrics.gauge(
+    "repro_service_buffered_updates",
+    "Structural updates buffered in the BufferedGraph awaiting flush").labels()
+_QUERY_KINDS = ("coreness", "in_kcore", "kcore_members", "top_k", "degeneracy")
+_QOBS = {
+    k: (_QUERIES.labels(kind=k), _QUERY_SECONDS.labels(kind=k))
+    for k in _QUERY_KINDS
+}
+
+
+# ======================================================= watermarked replies
+class Watermarked(int):
+    """An int query reply carrying the epoch watermark it was answered at.
+
+    Behaves exactly like ``int`` (equality, hashing, arithmetic) so existing
+    callers never notice; readers that care about staleness check ``.epoch``.
+    """
+
+    def __new__(cls, value, epoch: int):
+        self = super().__new__(cls, value)
+        self.epoch = int(epoch)
+        return self
+
+
+class WatermarkedArray(np.ndarray):
+    """ndarray view subclass whose ``.epoch`` is the reply's watermark.
+
+    Created as a zero-copy view, so readonly flags and values are exactly the
+    wrapped array's — cached replies stay shared and immutable.
+    """
+
+    def __array_finalize__(self, obj):
+        if obj is not None:
+            self.epoch = getattr(obj, "epoch", None)
+
+
+def _watermark(value, epoch: int):
+    """Stamp a query reply with its epoch watermark (satellite: every
+    CoreService reply must carry the epoch it was answered at)."""
+    if isinstance(value, np.ndarray):
+        out = value.view(WatermarkedArray)
+        out.epoch = int(epoch)
+        return out
+    return Watermarked(int(value), epoch)
 
 
 # ===================================================================== views
@@ -227,6 +291,8 @@ class CoreService:
         deg.setflags(write=False)
         self._view = EpochView(self.epoch, core, deg)
         self.cache.clear()
+        _EPOCH_GAUGE.set(self.epoch)
+        _BUFFERED_GAUGE.set(self.bg._size)
 
     # -------------------------------------------------------------- queries
     def view(self) -> EpochView:
@@ -234,46 +300,78 @@ class CoreService:
         return self._view
 
     def coreness(self, v):
-        return self._view.coreness(v)
+        t0 = time.perf_counter()
+        view = self._view
+        out = _watermark(view.coreness(v), view.epoch)
+        self._query_done("coreness", t0)
+        return out
 
     def in_kcore(self, v, k: int):
-        return self._view.in_kcore(v, k)
+        t0 = time.perf_counter()
+        view = self._view
+        out = _watermark(view.in_kcore(v, k), view.epoch)
+        self._query_done("in_kcore", t0)
+        return out
 
     def kcore_members(self, k: int) -> np.ndarray:
-        key = (self._view.epoch, "kcore", int(k))
+        t0 = time.perf_counter()
+        view = self._view
+        key = (view.epoch, "kcore", int(k))
         out = self.cache.get(key)
         if out is None:
-            out = self._view.kcore_members(k)
+            out = view.kcore_members(k)
             out.setflags(write=False)  # hits are shared across callers
             self.cache.put(key, out)
+        out = _watermark(out, view.epoch)
+        self._query_done("kcore_members", t0)
         return out
 
     def top_k(self, k: int) -> np.ndarray:
-        key = (self._view.epoch, "topk", int(k))
+        t0 = time.perf_counter()
+        view = self._view
+        key = (view.epoch, "topk", int(k))
         out = self.cache.get(key)
         if out is None:
-            out = self._view.top_k(k)
+            out = view.top_k(k)
             out.setflags(write=False)  # hits are shared across callers
             self.cache.put(key, out)
+        out = _watermark(out, view.epoch)
+        self._query_done("top_k", t0)
         return out
 
     def degeneracy(self) -> int:
-        return self._view.degeneracy()
+        t0 = time.perf_counter()
+        view = self._view
+        out = _watermark(view.degeneracy(), view.epoch)
+        self._query_done("degeneracy", t0)
+        return out
+
+    @staticmethod
+    def _query_done(kind: str, t0: float) -> None:
+        cnt, hist = _QOBS[kind]
+        cnt.inc()
+        hist.observe(time.perf_counter() - t0)
 
     # --------------------------------------------------------------- writes
     def ingest(self, ops) -> BatchStats:
         """Admit + log + apply one micro-batch; commit a new epoch view."""
         t0 = time.perf_counter()
-        admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
-        next_epoch = self.epoch + 1
-        if self.wal is not None:  # write-ahead: log before touching state
-            self.wal.append(next_epoch, admitted.deletes, admitted.inserts)
-        flushes0 = self._flush_events
-        m = self.maintainer.apply_batch(
-            admitted.deletes, admitted.inserts, self.insert_algorithm
-        )
-        self.epoch = next_epoch
-        self._publish()
+        with _trace.span("service.ingest", cat="stream") as sp:
+            admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
+            next_epoch = self.epoch + 1
+            if self.wal is not None:  # write-ahead: log before touching state
+                self.wal.append(next_epoch, admitted.deletes, admitted.inserts)
+            flushes0 = self._flush_events
+            m = self.maintainer.apply_batch(
+                admitted.deletes, admitted.inserts, self.insert_algorithm
+            )
+            self.epoch = next_epoch
+            self._publish()
+            if sp.active:
+                sp.set(epoch=next_epoch, requested=admitted.num_requested,
+                       applied=m.num_deletes + m.num_inserts, noops=m.num_noops)
+        _INGEST_SECONDS.observe(time.perf_counter() - t0)
+        _INGESTS.inc()
         stats = BatchStats(
             epoch=self.epoch,
             num_requested=admitted.num_requested,
@@ -337,6 +435,21 @@ class CoreService:
             # of the version-keyed resident structure, DESIGN.md §12)
             "backend_structure_builds": getattr(
                 self.maintainer.backend, "structure_builds", 0),
+        }
+
+    def metrics(self) -> dict:
+        """Observability endpoint: the process registry in both formats.
+
+        ``json`` is the full structured dump (families, series, histogram
+        buckets); ``prometheus`` is text exposition 0.0.4 ready to serve on a
+        ``/metrics`` route.  Stamped with the committed epoch watermark so a
+        scraper can correlate metric values with query replies.
+        """
+        reg = _metrics.get_registry()
+        return {
+            "epoch": self.epoch,
+            "json": reg.to_dict(),
+            "prometheus": reg.to_prometheus(),
         }
 
     # ------------------------------------------------------------- recovery

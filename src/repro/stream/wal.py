@@ -22,12 +22,27 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import time
 
 import numpy as np
 
 from ..graph.storage import CSRGraph
+from ..obs import metrics as _metrics, trace as _trace
 
 __all__ = ["WriteAheadLog", "SnapshotStore"]
+
+_WAL_APPENDS = _metrics.counter(
+    "repro_wal_appends_total", "WAL records appended").labels()
+_WAL_BYTES = _metrics.counter(
+    "repro_wal_bytes_total", "Bytes written to the WAL (incl. newline)").labels()
+_WAL_FSYNCS = _metrics.counter(
+    "repro_wal_fsyncs_total", "fsync() calls issued by the WAL").labels()
+_WAL_APPEND_SECONDS = _metrics.histogram(
+    "repro_wal_append_seconds", "WAL append latency (write+flush+fsync)")
+_SNAP_WRITES = _metrics.counter(
+    "repro_snapshot_writes_total", "Snapshots published atomically").labels()
+_SNAP_SECONDS = _metrics.histogram(
+    "repro_snapshot_seconds", "Snapshot save latency (write + rename + GC)")
 
 
 class WriteAheadLog:
@@ -60,10 +75,18 @@ class WriteAheadLog:
             "del": [[int(u), int(v)] for u, v in deletes],
             "ins": [[int(u), int(v)] for u, v in inserts],
         }
-        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
+        line = json.dumps(rec, separators=(",", ":")) + "\n"
+        t0 = time.perf_counter()
+        with _trace.span("wal.append", cat="stream", epoch=int(epoch),
+                         bytes=len(line), fsync=self.fsync):
+            self._f.write(line)
+            self._f.flush()
+            if self.fsync:
+                os.fsync(self._f.fileno())
+                _WAL_FSYNCS.inc()
+        _WAL_APPEND_SECONDS.observe(time.perf_counter() - t0)
+        _WAL_APPENDS.inc()
+        _WAL_BYTES.inc(len(line.encode("utf-8")))
         self.appends += 1
 
     def close(self) -> None:
@@ -112,21 +135,26 @@ class SnapshotStore:
         return os.path.join(self.root, f"{self.PREFIX}{epoch:012d}")
 
     def save(self, epoch: int, graph: CSRGraph, core: np.ndarray, cnt: np.ndarray) -> str:
-        tmp = os.path.join(self.root, ".snap_tmp")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        graph.save(tmp)
-        np.save(os.path.join(tmp, "core.npy"), np.asarray(core, dtype=np.int64))
-        np.save(os.path.join(tmp, "cnt.npy"), np.asarray(cnt, dtype=np.int64))
-        with open(os.path.join(tmp, "epoch.json"), "w") as f:
-            json.dump({"epoch": int(epoch)}, f)
-        final = self._dir(epoch)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)  # publish atomically
-        for name in os.listdir(self.root):  # GC superseded snapshots
-            if name.startswith(self.PREFIX) and os.path.join(self.root, name) != final:
-                shutil.rmtree(os.path.join(self.root, name))
+        t0 = time.perf_counter()
+        with _trace.span("snapshot.save", cat="stream", epoch=int(epoch),
+                         nodes=int(graph.n), edges=int(graph.m)):
+            tmp = os.path.join(self.root, ".snap_tmp")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            graph.save(tmp)
+            np.save(os.path.join(tmp, "core.npy"), np.asarray(core, dtype=np.int64))
+            np.save(os.path.join(tmp, "cnt.npy"), np.asarray(cnt, dtype=np.int64))
+            with open(os.path.join(tmp, "epoch.json"), "w") as f:
+                json.dump({"epoch": int(epoch)}, f)
+            final = self._dir(epoch)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)  # publish atomically
+            for name in os.listdir(self.root):  # GC superseded snapshots
+                if name.startswith(self.PREFIX) and os.path.join(self.root, name) != final:
+                    shutil.rmtree(os.path.join(self.root, name))
+        _SNAP_SECONDS.observe(time.perf_counter() - t0)
+        _SNAP_WRITES.inc()
         return final
 
     def latest(self):
