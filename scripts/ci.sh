@@ -63,6 +63,12 @@ fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
 
+# replication leg (DESIGN.md §15): 1 writer + 2 replicas (+1 late joiner)
+# tailing the WAL under sustained ingest with rotation every few batches.
+# Asserts bounded replica lag and bit-identical watermarked replies at the
+# final epoch; results/replication.json rides the artifact upload.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_replication.py --smoke
+
 # out-of-core smoke: build a ~1M-edge graph from chunks in a temp dir,
 # memmap-load it, decompose, and compare against the in-memory build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_outofcore.py --smoke

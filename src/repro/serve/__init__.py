@@ -1,13 +1,14 @@
 from .engine import ServeEngine
 from .registry import (available_services, create_service, register_service,
                        service_factory)
-from ..stream import CoreService
+from ..stream import CoreReplica, CoreService
 
 register_service("lm", ServeEngine)
 register_service("core-stream", CoreService)
+register_service("core-replica", CoreReplica)
 
 __all__ = [
-    "ServeEngine", "CoreService",
+    "ServeEngine", "CoreService", "CoreReplica",
     "register_service", "service_factory", "create_service",
     "available_services",
 ]

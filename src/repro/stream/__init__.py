@@ -1,19 +1,27 @@
 """Streaming core-graph service: online coreness queries over an edge stream.
 
-Built on the paper's §V maintenance algorithms: ``CoreService`` owns the
+Built on the paper's §V maintenance algorithms and split CQRS-style
+(DESIGN.md §15): ``CoreWriter`` (the established ``CoreService``) owns the
 semi-external node state, ingests insert/delete micro-batches through
-``CoreMaintainer``/``BufferedGraph``, and serves epoch-versioned reads with
-zero edge-table I/O.  WAL + snapshots give crash recovery via warm restart
-(DESIGN.md §9).
+``CoreMaintainer``/``BufferedGraph`` and appends them to the WAL before
+applying; ``CoreReplica`` read replicas bootstrap from the latest snapshot,
+tail the WAL incrementally (``WalTailer``) and serve the same epoch-versioned
+query surface from their own views with per-reply staleness watermarks.
+WAL + snapshots give crash recovery via warm restart (DESIGN.md §9); the WAL
+rotates on snapshot publish so the log size tracks the snapshot interval.
 """
 from .admission import AdmittedBatch, admit_batch
-from .service import BatchStats, CoreService, EpochView, RecoveryStats
-from .wal import SnapshotStore, WriteAheadLog
+from .replica import BootstrapStats, CoreReplica
+from .service import (BatchStats, CoreService, CoreWriter, EpochView,
+                      QueryAPI, RecoveryStats, Watermarked, WatermarkedArray)
+from .wal import SnapshotStore, WalGap, WalTailer, WriteAheadLog
 from .workload import mixed_stream
 
 __all__ = [
     "AdmittedBatch", "admit_batch",
-    "BatchStats", "CoreService", "EpochView", "RecoveryStats",
-    "SnapshotStore", "WriteAheadLog",
+    "BatchStats", "CoreService", "CoreWriter", "CoreReplica", "EpochView",
+    "QueryAPI", "RecoveryStats", "BootstrapStats",
+    "Watermarked", "WatermarkedArray",
+    "SnapshotStore", "WriteAheadLog", "WalTailer", "WalGap",
     "mixed_stream",
 ]

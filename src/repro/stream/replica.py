@@ -1,0 +1,298 @@
+"""CoreReplica: the read side of the CQRS split — WAL-tailing read replicas.
+
+The paper's semi-external contract makes the serving process cheap to
+replicate: a replica needs only the O(n) node arrays and the writer's WAL
+tail, never a second copy of the edge-table machinery's write path.  A
+``CoreReplica``
+
+* **bootstraps** from ``SnapshotStore.latest()`` + a *structural* replay of
+  the WAL tail, settled with one warm SemiCore* pass — exactly the
+  recovery discipline of ``CoreService.recover`` (DESIGN.md §9), so the
+  replica's ``(core, cnt)`` lands on the writer's exact fixpoint;
+* **tails** the WAL incrementally with :class:`~.wal.WalTailer` (byte-offset
+  cursor, complete-records-only, rotation-aware), replaying each admitted
+  batch through its own ``CoreMaintainer.apply_batch`` — the same exact
+  maintenance the writer ran — and publishing an :class:`EpochView` per
+  batch.  Per-node core views converge correctly under asynchronous,
+  replayed update orders (Montresor et al., arXiv 1103.5320); here the
+  replay order *is* the writer's commit order, so every replica epoch is
+  bit-identical to the writer's state at that epoch;
+* **serves** the full ``QueryAPI`` (coreness / in_kcore / kcore_members /
+  top_k / degeneracy) from its own epoch views, every reply watermarked
+  with the replica's committed epoch, with ``lag()`` exposing staleness as
+  (writer WAL tip epoch − replica epoch);
+* **catches up restartably**: if a rotation outruns the tailer
+  (:class:`~.wal.WalGap`), the replica re-bootstraps from the latest
+  snapshot — the same snapshot + tail path, incremental and restartable.
+
+Replica-side telemetry (DESIGN.md §14/§15): ``repro_replica_epoch`` /
+``repro_replica_lag`` gauges and a lag histogram per replica id; the
+per-kind query series of service.py are reused, so a dashboard sees one
+query-latency family across writer and replicas.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from ..core.engine import warm_settle
+from ..core.maintenance import CoreMaintainer
+from ..core.semicore import HostEngine
+from ..graph.storage import DEFAULT_BLOCK_EDGES
+from ..graph.updates import BufferedGraph
+from ..obs import metrics as _metrics, trace as _trace
+from .service import EpochView, QueryAPI, _LRUCache
+from .wal import SnapshotStore, WalGap, WalTailer, WriteAheadLog
+
+__all__ = ["CoreReplica", "BootstrapStats"]
+
+_REPLICA_EPOCH = _metrics.gauge(
+    "repro_replica_epoch", "Replica committed epoch watermark")
+_REPLICA_LAG = _metrics.gauge(
+    "repro_replica_lag",
+    "Replica staleness: writer WAL tip epoch minus replica epoch")
+_REPLICA_LAG_EPOCHS = _metrics.histogram(
+    "repro_replica_lag_epochs",
+    "Observed replica lag (epochs) at each lag() probe",
+    buckets=_metrics.DEFAULT_COUNT_BUCKETS)
+_REPLICA_BATCHES = _metrics.counter(
+    "repro_replica_batches_applied_total",
+    "WAL batches replayed into replica epoch views")
+_REPLICA_SYNC_SECONDS = _metrics.histogram(
+    "repro_replica_sync_seconds", "Replica sync() latency (tail + apply)")
+_REPLICA_BOOTSTRAPS = _metrics.counter(
+    "repro_replica_bootstraps_total",
+    "Replica bootstraps (snapshot + structural tail replay + warm settle); "
+    "first one is construction, later ones are WalGap catch-ups")
+
+
+@dataclass
+class BootstrapStats:
+    """What one bootstrap (construction or WalGap catch-up) did."""
+
+    snapshot_epoch: int
+    bootstrapped_epoch: int
+    replayed_batches: int
+    replayed_updates: int
+    applied_deletes: int
+    applied_inserts: int
+    warm_restart: bool  # False => no WAL tail, snapshot state used as-is
+    settle_node_computations: int = 0
+    settle_iterations: int = 0
+
+
+class CoreReplica(QueryAPI):
+    """Serves the query surface from WAL-replayed epoch views (DESIGN.md §15).
+
+    A replica never writes: it owns no WAL handle and no snapshot publisher,
+    only a :class:`WalTailer` cursor over the writer's log and its own
+    ``CoreMaintainer`` holding the O(n) node state.  ``sync()`` drains newly
+    durable batches; every committed batch publishes a fresh immutable
+    ``EpochView`` (the last ``keep_views`` are retained so a reader can pin
+    a recent epoch), and queries answer from the newest one, watermarked.
+    """
+
+    def __init__(
+        self,
+        *,
+        snapshot_dir: str,
+        wal_path: str,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
+        insert_algorithm: str = "semiinsert*",
+        backend=None,
+        superstep_chunk: int | None = None,
+        cache_size: int = 256,
+        replica_id: int = 0,
+        keep_views: int = 4,
+    ):
+        self.snapshots = SnapshotStore(snapshot_dir)
+        self.wal_path = wal_path
+        self.block_edges = int(block_edges)
+        self.pool_blocks = int(pool_blocks)
+        self.insert_algorithm = insert_algorithm
+        self._backend = backend
+        self._superstep_chunk = superstep_chunk
+        self.replica_id = int(replica_id)
+        self.keep_views = max(int(keep_views), 1)
+        self.cache = _LRUCache(cache_size)
+        self.views: list[EpochView] = []  # newest last, bounded chain
+        self.bootstraps = 0
+        self.batches_applied = 0
+        self.last_bootstrap: BootstrapStats | None = None
+        _lbl = {"replica": str(self.replica_id)}
+        self._epoch_gauge = _REPLICA_EPOCH.labels(**_lbl)
+        self._lag_gauge = _REPLICA_LAG.labels(**_lbl)
+        self._lag_hist = _REPLICA_LAG_EPOCHS.labels(**_lbl)
+        self._batches_ctr = _REPLICA_BATCHES.labels(**_lbl)
+        self._sync_hist = _REPLICA_SYNC_SECONDS.labels(**_lbl)
+        self._bootstraps_ctr = _REPLICA_BOOTSTRAPS.labels(**_lbl)
+        self._bootstrap()
+
+    # ------------------------------------------------------------ bootstrap
+    def _bootstrap(self) -> None:
+        """Snapshot + structural WAL-tail replay + warm settle (restartable).
+
+        This *is* the catch-up protocol: a fresh replica, a replica that
+        fell behind a rotation, and writer crash recovery all walk the same
+        path.  A rotation racing the bootstrap (newer snapshot published
+        between ``latest()`` and the tail replay) surfaces as a
+        :class:`WalGap` and simply restarts the bootstrap against the newer
+        snapshot.
+        """
+        with _trace.span("replica.bootstrap", cat="stream",
+                         replica=self.replica_id):
+            for _ in range(3):  # rotation races are resolved by retrying
+                try:
+                    self._bootstrap_once()
+                    break
+                except WalGap:
+                    continue
+            else:
+                raise RuntimeError(
+                    "replica bootstrap kept losing rotation races; "
+                    "is the writer snapshotting every batch?")
+        self.bootstraps += 1
+        self._bootstraps_ctr.inc()
+        self._publish()
+        self.lag()
+
+    def _bootstrap_once(self) -> None:
+        snap = self.snapshots.latest()
+        if snap is None:
+            raise RuntimeError(
+                "CoreReplica needs a published snapshot to bootstrap from; "
+                "call writer.snapshot() first")
+        epoch0, g, core0, cnt0 = snap
+        bg = BufferedGraph(g)
+        tailer = WalTailer(self.wal_path, after_epoch=epoch0)
+        applied_d = applied_i = batches = updates = 0
+        last_epoch = epoch0
+        for e, dels, ins in tailer.poll():
+            batches += 1
+            updates += len(dels) + len(ins)
+            for u, v in dels:
+                applied_d += bool(bg.delete_edge(int(u), int(v)))
+            for u, v in ins:
+                applied_i += bool(bg.insert_edge(int(u), int(v)))
+            last_epoch = e
+        settle = None
+        if applied_d or applied_i:
+            bg.flush()  # one CSR rewrite so the settle scans exact lists
+            eng = HostEngine(bg, self.block_edges, pool_blocks=self.pool_blocks)
+            settle = warm_settle(eng, core0, applied_i, self._backend,
+                                 superstep_chunk=self._superstep_chunk)
+            state = (settle.core, settle.cnt)
+        else:
+            state = (core0, cnt0)
+        self.maintainer = CoreMaintainer(
+            bg, self.block_edges, state=state, pool_blocks=self.pool_blocks,
+            backend=self._backend, superstep_chunk=self._superstep_chunk,
+        )
+        self.bg = self.maintainer.bg
+        self.epoch = last_epoch
+        self.tailer = tailer
+        self.last_bootstrap = BootstrapStats(
+            snapshot_epoch=epoch0,
+            bootstrapped_epoch=last_epoch,
+            replayed_batches=batches,
+            replayed_updates=updates,
+            applied_deletes=applied_d,
+            applied_inserts=applied_i,
+            warm_restart=settle is not None,
+            settle_node_computations=settle.node_computations if settle else 0,
+            settle_iterations=settle.iterations if settle else 0,
+        )
+
+    # ----------------------------------------------------------- publishing
+    def _publish(self) -> None:
+        super()._publish()
+        self.views.append(self._view)
+        del self.views[:-self.keep_views]
+
+    def _publish_metrics(self) -> None:
+        self._epoch_gauge.set(self.epoch)
+
+    def view_at(self, epoch: int) -> EpochView:
+        """A retained view at exactly ``epoch`` (KeyError when evicted)."""
+        for v in self.views:
+            if v.epoch == epoch:
+                return v
+        raise KeyError(
+            f"epoch {epoch} not retained (have "
+            f"{[v.epoch for v in self.views]})")
+
+    # ----------------------------------------------------------------- sync
+    def sync(self, max_batches: int | None = None) -> int:
+        """Drain newly durable WAL records into the epoch-view chain.
+
+        Replays each batch through ``CoreMaintainer.apply_batch`` — the
+        writer's own maintenance path, so the settled ``(core, cnt)`` is
+        bit-identical to the writer's at the same epoch — and publishes one
+        ``EpochView`` per batch.  Falling behind a rotation re-bootstraps
+        from the latest snapshot (the restartable catch-up path).  Returns
+        the number of batches applied (bootstrap counts as one).
+        """
+        t0 = time.perf_counter()
+        applied = 0
+        with _trace.span("replica.sync", cat="stream",
+                         replica=self.replica_id) as sp:
+            try:
+                for e, dels, ins in self.tailer.poll():
+                    self.maintainer.apply_batch(
+                        dels, ins, self.insert_algorithm)
+                    self.epoch = e
+                    self.batches_applied += 1
+                    self._batches_ctr.inc()
+                    applied += 1
+                    self._publish()
+                    if max_batches is not None and applied >= max_batches:
+                        break
+            except WalGap:
+                self._bootstrap()
+                applied += 1
+            if sp.active:
+                sp.set(applied=applied, epoch=self.epoch)
+        self._sync_hist.observe(time.perf_counter() - t0)
+        self.lag()
+        return applied
+
+    # ------------------------------------------------------------ staleness
+    def lag(self, writer_epoch: int | None = None) -> int:
+        """Epochs this replica trails the writer (0 = fully caught up).
+
+        With ``writer_epoch`` given, that is the authority; otherwise the
+        writer's committed tip is read from the WAL's last complete record
+        (an O(record) backwards peek — the WAL is append-before-apply, so
+        its tip bounds the writer's committed epoch from above by at most
+        the one in-flight batch), floored by the latest snapshot's epoch:
+        right after a rotation the WAL can be empty, but the snapshot that
+        triggered the rotation pins the writer's epoch from below.
+        """
+        if writer_epoch is None:
+            tip = WriteAheadLog.tip_epoch(self.wal_path)
+            snap = self.snapshots.latest_epoch()
+            writer_epoch = max(
+                x for x in (tip, snap, self.epoch) if x is not None)
+        out = max(0, int(writer_epoch) - int(self.epoch))
+        self._lag_gauge.set(out)
+        self._lag_hist.observe(out)
+        return out
+
+    # ---------------------------------------------------------------- stats
+    def replica_stats(self) -> dict:
+        return {
+            "replica_id": self.replica_id,
+            "epoch": self.epoch,
+            "lag": self.lag(),
+            "n": self.bg.n,
+            "m": self.bg.m,
+            "batches_applied": self.batches_applied,
+            "bootstraps": self.bootstraps,
+            "rotations_detected": self.tailer.rotations_detected,
+            "wal_records_read": self.tailer.records_read,
+            "retained_views": [v.epoch for v in self.views],
+            "cache_hits": self.cache.hits,
+            "cache_misses": self.cache.misses,
+            "backend": self.maintainer.backend.name,
+        }

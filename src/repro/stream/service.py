@@ -1,25 +1,32 @@
-"""CoreService: online coreness queries over a live edge stream.
+"""CoreWriter: the write side of the CQRS-split streaming core service.
 
 The paper's semi-external contract — O(n) node state in memory, edge table on
 disk — is exactly the shape of a long-lived serving process, and §V's
-maintenance algorithms are built for continuous updates.  ``CoreService``
-packages them as a service:
+maintenance algorithms are built for continuous updates.  The service is
+split CQRS-style (DESIGN.md §15):
 
-* **writes** — an edge-update stream ingested in micro-batches.  Each batch
-  is admitted (normalized / coalesced / deletes-first, see admission.py),
-  logged to the write-ahead log, then applied through
-  ``CoreMaintainer.apply_batch`` (SemiDelete* + SemiInsert*), keeping
-  ``core``/``cnt`` exact after every batch;
-* **reads** — ``coreness``, k-core membership, top-k by coreness and the
-  degeneracy, answered from an immutable *epoch view*: a frozen copy of the
-  O(n) node arrays published atomically after each batch commit.  Readers
-  never observe a half-applied batch, and the query path performs **zero
-  edge-table I/O** — it never touches the BlockReader.  Set queries are
-  memoized in an LRU cache that is invalidated on every epoch publish;
+* **writes** (``CoreWriter``, this module) — an edge-update stream ingested
+  in micro-batches.  Each batch is admitted (normalized / coalesced /
+  deletes-first, see admission.py), logged to the write-ahead log, then
+  applied through ``CoreMaintainer.apply_batch`` (SemiDelete* +
+  SemiInsert*), keeping ``core``/``cnt`` exact after every batch;
+* **reads** (``QueryAPI``, shared) — ``coreness``, k-core membership, top-k
+  by coreness and the degeneracy, answered from an immutable *epoch view*:
+  a frozen copy of the O(n) node arrays published atomically after each
+  batch commit.  Readers never observe a half-applied batch, and the query
+  path performs **zero edge-table I/O** — it never touches the BlockReader.
+  Set queries are memoized in an LRU cache that is invalidated on every
+  epoch publish.  The same query surface is served by ``CoreReplica``
+  (replica.py) from its own WAL-tailed epoch views, which is what lets
+  reads scale independently of the single writer;
 * **durability** — the WAL records a batch before it is applied; periodic
-  snapshots dump (epoch, CSR, core, cnt) atomically.  Recovery replays the
-  WAL tail structurally and warm-restarts SemiCore* from a provable upper
-  bound instead of recomputing from scratch (DESIGN.md §9).
+  snapshots dump (epoch, CSR, core, cnt) atomically and rotate the WAL past
+  the snapshot epoch.  Recovery replays the WAL tail structurally and
+  warm-restarts SemiCore* from a provable upper bound instead of
+  recomputing from scratch (DESIGN.md §9).
+
+``CoreService`` remains as the established name of the writer (it serves
+both roles in a single-process deployment).
 """
 from __future__ import annotations
 
@@ -39,7 +46,8 @@ from .admission import AdmittedBatch, admit_batch
 from .wal import SnapshotStore, WriteAheadLog
 
 __all__ = [
-    "EpochView", "BatchStats", "RecoveryStats", "CoreService",
+    "EpochView", "BatchStats", "RecoveryStats", "QueryAPI",
+    "CoreWriter", "CoreService",
     "Watermarked", "WatermarkedArray",
 ]
 
@@ -87,11 +95,65 @@ class WatermarkedArray(np.ndarray):
 
     Created as a zero-copy view, so readonly flags and values are exactly the
     wrapped array's — cached replies stay shared and immutable.
+
+    Watermark propagation semantics (pinned by tests/test_stream.py):
+
+    * **derived arrays keep the source epoch** — slices, views, reshapes,
+      copies and single-source ufunc results (``members + 1``) answer for
+      the same epoch their data came from;
+    * **mixed-epoch operands drop to ``None``** — combining replies from
+      different epochs produces data that answers for *no* well-defined
+      epoch, and a ``None`` watermark says so instead of silently inheriting
+      whichever operand numpy templated the result from (the pre-fix
+      behavior).  Operands without a watermark (plain ndarrays, scalars, or
+      an unstamped ``WatermarkedArray``) don't constrain the epoch: mixing
+      a reply with constants keeps the reply's epoch.
     """
+
+    #: class-level default: an array that never got stamped has no watermark.
+    epoch = None
 
     def __array_finalize__(self, obj):
         if obj is not None:
             self.epoch = getattr(obj, "epoch", None)
+
+    def __array_ufunc__(self, ufunc, method, *inputs, **kwargs):
+        epochs = {
+            x.epoch for x in inputs
+            if isinstance(x, WatermarkedArray) and x.epoch is not None
+        }
+        epoch = epochs.pop() if len(epochs) == 1 else None
+        # compute on the plain ndarray views so numpy's subclass templating
+        # (which would copy one arbitrary operand's epoch) never runs.
+        plain = tuple(
+            x.view(np.ndarray) if isinstance(x, WatermarkedArray) else x
+            for x in inputs
+        )
+        out = kwargs.get("out")
+        if out is not None:
+            kwargs["out"] = tuple(
+                o.view(np.ndarray) if isinstance(o, WatermarkedArray) else o
+                for o in out
+            )
+        result = getattr(ufunc, method)(*plain, **kwargs)
+        if result is NotImplemented:
+            return NotImplemented
+
+        def stamp(r, o):
+            if o is not None and isinstance(o, WatermarkedArray):
+                o.epoch = epoch  # in-place result: restamp the caller's array
+                return o
+            if isinstance(r, np.ndarray):
+                r = r.view(WatermarkedArray)
+                r.epoch = epoch
+                return r
+            return r  # scalar reductions stay plain python/numpy scalars
+
+        outs = out if out is not None else (None,) * (
+            len(result) if isinstance(result, tuple) else 1)
+        if isinstance(result, tuple):
+            return tuple(stamp(r, o) for r, o in zip(result, outs))
+        return stamp(result, outs[0])
 
 
 def _watermark(value, epoch: int):
@@ -225,63 +287,18 @@ class _LRUCache:
         self._d.clear()
 
 
-# =================================================================== service
-class CoreService:
-    """Owns the semi-external node state and serves it under a live stream.
+# ============================================================== query surface
+class QueryAPI:
+    """The read side of the CQRS split: epoch-view queries + LRU memoization.
 
-    ``backend`` selects the batch-settle compute substrate ("numpy" | "xla"
-    | "pallas" | "shard", DESIGN.md §11/§13); the numpy default keeps the
-    paper's per-edge seq maintenance, any other backend ingests each batch
-    through one warm-started SemiCore* batch settle on that backend —
-    device-resident by default (DESIGN.md §12): the settle's node state
-    stays on device across its passes, and the uploaded edge table (sharded
-    over the mesh for ``"shard"``) is version-keyed on the long-lived
-    maintainer, so a batch that turns out structure-free (all no-ops)
-    re-uploads nothing.
+    Shared verbatim by the writer (``CoreWriter``) and the read replicas
+    (``CoreReplica``): both publish immutable :class:`EpochView`s of their
+    own O(n) node state and answer every query from the committed view, with
+    every reply watermarked by the epoch it was answered at.  Requires the
+    host object to provide ``self.epoch``, ``self.maintainer``, ``self.bg``
+    and ``self.cache``; publishing calls :meth:`_publish_metrics` so each
+    side exports its own gauges (writer epoch vs. replica epoch/lag).
     """
-
-    def __init__(
-        self,
-        graph,
-        *,
-        block_edges: int = DEFAULT_BLOCK_EDGES,
-        pool_blocks: int = 1,
-        insert_algorithm: str = "semiinsert*",
-        wal_path: str | None = None,
-        wal_fsync: bool = False,
-        snapshot_dir: str | None = None,
-        snapshot_every: int = 0,
-        cache_size: int = 256,
-        state: tuple[np.ndarray, np.ndarray] | None = None,
-        epoch: int = 0,
-        backend=None,
-        superstep_chunk: int | None = None,
-    ):
-        self.maintainer = CoreMaintainer(
-            graph, block_edges, state=state, pool_blocks=pool_blocks,
-            backend=backend, superstep_chunk=superstep_chunk,
-        )
-        self.bg: BufferedGraph = self.maintainer.bg
-        self.insert_algorithm = insert_algorithm
-        self.epoch = int(epoch)
-        self.wal = WriteAheadLog(wal_path, fsync=wal_fsync) if wal_path else None
-        self.snapshots = SnapshotStore(snapshot_dir) if snapshot_dir else None
-        self.snapshot_every = int(snapshot_every)
-        self._batches_since_snapshot = 0
-        self.cache = _LRUCache(cache_size)
-        self.batch_log: list[BatchStats] = []
-        self._flush_events = 0
-        self.bg.add_flush_hook(self._on_flush)
-        self._publish()
-
-    # ------------------------------------------------------------ internals
-    def _on_flush(self, bg: BufferedGraph) -> None:
-        # storage epoch turned over: the CSR was rewritten under the engine.
-        # HostEngine re-points lazily on the next read, but the buffer pool
-        # holds blocks of the *old* edge table — drop them now so a pooled
-        # reader never serves stale hits across the rewrite.
-        self._flush_events += 1
-        self.maintainer.engine.reader.invalidate()
 
     def _publish(self) -> None:
         """Commit the current node state as the readable epoch view."""
@@ -291,8 +308,10 @@ class CoreService:
         deg.setflags(write=False)
         self._view = EpochView(self.epoch, core, deg)
         self.cache.clear()
-        _EPOCH_GAUGE.set(self.epoch)
-        _BUFFERED_GAUGE.set(self.bg._size)
+        self._publish_metrics()
+
+    def _publish_metrics(self) -> None:  # pragma: no cover - overridden
+        raise NotImplementedError
 
     # -------------------------------------------------------------- queries
     def view(self) -> EpochView:
@@ -352,6 +371,84 @@ class CoreService:
         cnt.inc()
         hist.observe(time.perf_counter() - t0)
 
+    def metrics(self) -> dict:
+        """Observability endpoint: the process registry in both formats.
+
+        ``json`` is the full structured dump (families, series, histogram
+        buckets); ``prometheus`` is text exposition 0.0.4 ready to serve on a
+        ``/metrics`` route.  Stamped with the committed epoch watermark so a
+        scraper can correlate metric values with query replies.
+        """
+        reg = _metrics.get_registry()
+        return {
+            "epoch": self.epoch,
+            "json": reg.to_dict(),
+            "prometheus": reg.to_prometheus(),
+        }
+
+
+# ==================================================================== writer
+class CoreWriter(QueryAPI):
+    """Owns the semi-external node state and serves it under a live stream.
+
+    ``backend`` selects the batch-settle compute substrate ("numpy" | "xla"
+    | "pallas" | "shard", DESIGN.md §11/§13); the numpy default keeps the
+    paper's per-edge seq maintenance, any other backend ingests each batch
+    through one warm-started SemiCore* batch settle on that backend —
+    device-resident by default (DESIGN.md §12): the settle's node state
+    stays on device across its passes, and the uploaded edge table (sharded
+    over the mesh for ``"shard"``) is version-keyed on the long-lived
+    maintainer, so a batch that turns out structure-free (all no-ops)
+    re-uploads nothing.
+    """
+
+    def __init__(
+        self,
+        graph,
+        *,
+        block_edges: int = DEFAULT_BLOCK_EDGES,
+        pool_blocks: int = 1,
+        insert_algorithm: str = "semiinsert*",
+        wal_path: str | None = None,
+        wal_fsync: bool = False,
+        snapshot_dir: str | None = None,
+        snapshot_every: int = 0,
+        cache_size: int = 256,
+        state: tuple[np.ndarray, np.ndarray] | None = None,
+        epoch: int = 0,
+        backend=None,
+        superstep_chunk: int | None = None,
+    ):
+        self.maintainer = CoreMaintainer(
+            graph, block_edges, state=state, pool_blocks=pool_blocks,
+            backend=backend, superstep_chunk=superstep_chunk,
+        )
+        self.bg: BufferedGraph = self.maintainer.bg
+        self.insert_algorithm = insert_algorithm
+        self.epoch = int(epoch)
+        self.wal = WriteAheadLog(wal_path, fsync=wal_fsync) if wal_path else None
+        self.snapshots = SnapshotStore(snapshot_dir) if snapshot_dir else None
+        self.snapshot_every = int(snapshot_every)
+        self._batches_since_snapshot = 0
+        self.cache = _LRUCache(cache_size)
+        self.batch_log: list[BatchStats] = []
+        self._flush_events = 0
+        self.bg.add_flush_hook(self._on_flush)
+        self._publish()
+
+    # ------------------------------------------------------------ internals
+    def _on_flush(self, bg: BufferedGraph) -> None:
+        # storage epoch turned over: the CSR was rewritten under the engine.
+        # HostEngine re-points lazily on the next read, but the buffer pool
+        # holds blocks of the *old* edge table — drop them now so a pooled
+        # reader never serves stale hits across the rewrite.
+        self._flush_events += 1
+        self.maintainer.engine.reader.invalidate()
+
+    def _publish_metrics(self) -> None:
+        _EPOCH_GAUGE.set(self.epoch)
+        _BUFFERED_GAUGE.set(self.bg._size)
+
     # --------------------------------------------------------------- writes
     def ingest(self, ops) -> BatchStats:
         """Admit + log + apply one micro-batch; commit a new epoch view."""
@@ -399,11 +496,22 @@ class CoreService:
         return stats
 
     def snapshot(self) -> None:
-        """Flush the update buffer and atomically dump the durable state."""
+        """Flush the update buffer and atomically dump the durable state.
+
+        Snapshot publish also rotates the WAL: records at or below the
+        snapshot epoch are superseded (recovery and replica bootstrap both
+        start from the snapshot) and would otherwise grow the log without
+        bound.  Rotation is atomic (stream the tail to a temp file +
+        ``os.replace``) and ordered *after* the snapshot publish, so a crash
+        between the two leaves a WAL that is merely longer than necessary,
+        never one missing records the latest snapshot doesn't cover.
+        """
         if self.snapshots is None:
             raise RuntimeError("CoreService was built without a snapshot_dir")
         g = self.bg.materialize()
         self.snapshots.save(self.epoch, g, self.maintainer.core, self.maintainer.cnt)
+        if self.wal is not None:
+            self.wal.rotate(self.epoch)
         self._batches_since_snapshot = 0
 
     def close(self) -> None:
@@ -435,21 +543,6 @@ class CoreService:
             # of the version-keyed resident structure, DESIGN.md §12)
             "backend_structure_builds": getattr(
                 self.maintainer.backend, "structure_builds", 0),
-        }
-
-    def metrics(self) -> dict:
-        """Observability endpoint: the process registry in both formats.
-
-        ``json`` is the full structured dump (families, series, histogram
-        buckets); ``prometheus`` is text exposition 0.0.4 ready to serve on a
-        ``/metrics`` route.  Stamped with the committed epoch watermark so a
-        scraper can correlate metric values with query replies.
-        """
-        reg = _metrics.get_registry()
-        return {
-            "epoch": self.epoch,
-            "json": reg.to_dict(),
-            "prometheus": reg.to_prometheus(),
         }
 
     # ------------------------------------------------------------- recovery
@@ -533,3 +626,10 @@ class CoreService:
             settle_edge_block_reads=settle.edge_block_reads if settle else 0,
         )
         return svc, stats
+
+
+#: Established name of the writer.  In a single-process deployment the
+#: writer serves both roles of the CQRS split, so the historical service
+#: name stays bound to it; replicated deployments pair one ``CoreWriter``
+#: with N ``CoreReplica``s (replica.py, DESIGN.md §15).
+CoreService = CoreWriter

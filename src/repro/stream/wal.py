@@ -16,6 +16,19 @@ needs only:
 Recovery = latest snapshot + structural replay of the WAL tail + a warm
 SemiCore* settle (see service.recover; DESIGN.md §9 for the upper-bound
 argument).
+
+The WAL is also the **replication stream** (DESIGN.md §15): read replicas
+tail it with :class:`WalTailer` — a stat/offset cursor that consumes only
+complete (newline-terminated) records, tolerates the writer's in-flight
+tail, and re-seeks after a rotation.  Rotation (``rotate(after_epoch)``,
+invoked on snapshot publish) atomically drops records a published snapshot
+supersedes, so the log's size tracks the snapshot interval rather than the
+stream's lifetime.
+
+Memory discipline: replay, torn-tail truncation, tailing and rotation are
+all O(record) — the log is streamed line-by-line (the torn tail is found by
+scanning *backwards* in bounded chunks), never slurped, so a multi-GB WAL
+recovers in constant memory.
 """
 from __future__ import annotations
 
@@ -29,7 +42,7 @@ import numpy as np
 from ..graph.storage import CSRGraph
 from ..obs import metrics as _metrics, trace as _trace
 
-__all__ = ["WriteAheadLog", "SnapshotStore"]
+__all__ = ["WriteAheadLog", "SnapshotStore", "WalTailer", "WalGap"]
 
 _WAL_APPENDS = _metrics.counter(
     "repro_wal_appends_total", "WAL records appended").labels()
@@ -39,35 +52,85 @@ _WAL_FSYNCS = _metrics.counter(
     "repro_wal_fsyncs_total", "fsync() calls issued by the WAL").labels()
 _WAL_APPEND_SECONDS = _metrics.histogram(
     "repro_wal_append_seconds", "WAL append latency (write+flush+fsync)")
+_WAL_ROTATIONS = _metrics.counter(
+    "repro_wal_rotations_total", "WAL rotations (snapshot-superseded prefix "
+    "dropped atomically)").labels()
+_WAL_ROTATED_RECORDS = _metrics.counter(
+    "repro_wal_rotated_records_total",
+    "WAL records dropped by rotation (epoch <= snapshot epoch)").labels()
 _SNAP_WRITES = _metrics.counter(
     "repro_snapshot_writes_total", "Snapshots published atomically").labels()
 _SNAP_SECONDS = _metrics.histogram(
     "repro_snapshot_seconds", "Snapshot save latency (write + rename + GC)")
 
+#: backwards-scan chunk for torn-tail detection / tip peeking (bytes).
+_SCAN_CHUNK = 1 << 16
+
+
+class WalGap(RuntimeError):
+    """A tailer fell behind a rotation: the WAL no longer contains the next
+    record it needs (first surviving epoch > last applied + 1).  The tailer's
+    owner must catch up through the snapshot store instead (DESIGN.md §15)."""
+
+
+def _find_tail_start(f, size: int, chunk: int = _SCAN_CHUNK) -> int:
+    """Byte offset where the final (possibly torn) line begins.
+
+    Scans *backwards* in bounded chunks from ``size`` for the last newline
+    strictly before the final byte, so memory stays O(chunk) no matter how
+    large the log is.  ``size`` must not include a trailing newline byte at
+    ``size-1`` (callers strip it first when they want the last *complete*
+    line).
+    """
+    pos = size
+    while pos > 0:
+        lo = max(0, pos - chunk)
+        f.seek(lo)
+        buf = f.read(pos - lo)
+        nl = buf.rfind(b"\n")
+        if nl != -1:
+            return lo + nl + 1
+        pos = lo
+    return 0
+
 
 class WriteAheadLog:
     """Append-only JSONL of admitted micro-batches, keyed by epoch."""
+
+    ROTATE_TMP_SUFFIX = ".rotate_tmp"
 
     def __init__(self, path: str, fsync: bool = False):
         self.path = path
         self.fsync = fsync
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        # a crash mid-rotation leaves the filtered temp file behind with the
+        # original log intact (os.replace never ran): discard the temp.
+        tmp = path + self.ROTATE_TMP_SUFFIX
+        if os.path.exists(tmp):
+            os.remove(tmp)
         self._truncate_torn_tail(path)
         self._f = open(path, "a", encoding="utf-8")
         self.appends = 0
+        self.rotations = 0
 
     @staticmethod
     def _truncate_torn_tail(path: str) -> None:
         """Drop a crash-torn final line so new appends never concatenate
-        onto it (a merged line would corrupt the *next* recovery)."""
+        onto it (a merged line would corrupt the *next* recovery).
+
+        The last newline is found by scanning backwards in bounded chunks —
+        peak memory is O(chunk), not O(log)."""
         if not os.path.exists(path):
             return
         with open(path, "rb+") as f:
-            data = f.read()
-            if not data or data.endswith(b"\n"):
+            f.seek(0, os.SEEK_END)
+            size = f.tell()
+            if size == 0:
                 return
-            cut = data.rfind(b"\n") + 1  # 0 when the only line is torn
-            f.truncate(cut)
+            f.seek(size - 1)
+            if f.read(1) == b"\n":
+                return
+            f.truncate(_find_tail_start(f, size - 1))
 
     def append(self, epoch: int, deletes, inserts) -> None:
         rec = {
@@ -89,6 +152,45 @@ class WriteAheadLog:
         _WAL_BYTES.inc(len(line.encode("utf-8")))
         self.appends += 1
 
+    def rotate(self, after_epoch: int) -> int:
+        """Atomically drop records with ``epoch <= after_epoch``.
+
+        Invoked on snapshot publish: a record at or below the snapshot epoch
+        is superseded (recovery and replicas bootstrap from the snapshot) and
+        only bloats replay.  The surviving tail is *streamed* to a temp file
+        and published with ``os.replace`` — a crash at any point leaves
+        either the old complete log or the new complete log, never a
+        half-rotated one.  Tailers notice the inode change and re-seek
+        (:class:`WalTailer`).  Returns the number of records dropped.
+        """
+        self._f.flush()
+        tmp = self.path + self.ROTATE_TMP_SUFFIX
+        dropped = 0
+        with _trace.span("wal.rotate", cat="stream",
+                         after_epoch=int(after_epoch)):
+            with open(self.path, "r", encoding="utf-8") as src, \
+                    open(tmp, "w", encoding="utf-8") as out:
+                for line in src:  # streamed: O(record) memory
+                    stripped = line.strip()
+                    if not stripped:
+                        continue
+                    if json.loads(stripped)["epoch"] <= after_epoch:
+                        dropped += 1
+                    else:
+                        out.write(stripped + "\n")
+                out.flush()
+                if self.fsync:
+                    os.fsync(out.fileno())
+            os.replace(tmp, self.path)
+            # the open append handle points at the replaced (now anonymous)
+            # inode — reopen so later appends land in the published log.
+            self._f.close()
+            self._f = open(self.path, "a", encoding="utf-8")
+        self.rotations += 1
+        _WAL_ROTATIONS.inc()
+        _WAL_ROTATED_RECORDS.inc(dropped)
+        return dropped
+
     def close(self) -> None:
         self._f.close()
 
@@ -96,30 +198,127 @@ class WriteAheadLog:
     def replay(path: str, after_epoch: int = -1):
         """Yield ``(epoch, deletes, inserts)`` for batches past ``after_epoch``.
 
+        Streams the log line-by-line (O(record) memory, never ``readlines``).
         A torn (crash-interrupted) final line is skipped; corruption anywhere
         else is a real error and raises.
         """
         if not os.path.exists(path):
             return
         with open(path, "r", encoding="utf-8") as f:
-            lines = f.readlines()
-        for i, line in enumerate(lines):
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError:
-                if i == len(lines) - 1:
-                    return  # torn tail: the batch was never acknowledged
-                raise
-            if rec["epoch"] <= after_epoch:
-                continue
-            yield (
-                rec["epoch"],
-                [tuple(e) for e in rec["del"]],
-                [tuple(e) for e in rec["ins"]],
-            )
+            for line in f:
+                stripped = line.strip()
+                if not stripped:
+                    continue
+                try:
+                    rec = json.loads(stripped)
+                except json.JSONDecodeError:
+                    # only a *final* bad line is a torn tail (the batch was
+                    # never acknowledged); anything after it means mid-log
+                    # corruption, which must not be silently skipped.
+                    if f.read(_SCAN_CHUNK).strip():
+                        raise
+                    return
+                if rec["epoch"] <= after_epoch:
+                    continue
+                yield (
+                    rec["epoch"],
+                    [tuple(e) for e in rec["del"]],
+                    [tuple(e) for e in rec["ins"]],
+                )
+
+    @staticmethod
+    def tip_epoch(path: str):
+        """Epoch of the last *complete* record, or ``None`` for no record.
+
+        Reads only the final line (backwards chunk scan + one parse), so a
+        replica's ``lag()`` probe costs O(record) regardless of log size.
+        """
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            f.seek(0, os.SEEK_END)
+            end = f.tell()
+            if end:
+                f.seek(end - 1)
+                if f.read(1) != b"\n":  # torn final line: step back past it
+                    end = _find_tail_start(f, end - 1)
+            while end > 0:
+                # ``end`` sits just past a newline: the line ending there is
+                # complete.  Blank lines are skipped by scanning further back.
+                start = _find_tail_start(f, end - 1)
+                f.seek(start)
+                line = f.read(end - start).strip()
+                if line:
+                    return int(json.loads(line)["epoch"])
+                end = start
+        return None
+
+
+class WalTailer:
+    """Incremental, restartable WAL cursor for read replicas (DESIGN.md §15).
+
+    Resumes from a byte offset, consumes only **complete** records (a final
+    line without its newline is the writer's in-flight append — or a torn
+    crash remnant — and is left for the next poll), deduplicates by epoch,
+    and re-verifies its position after a rotation: ``os.replace`` swaps the
+    inode, so a changed inode (or a size below the cursor) forces a re-seek
+    from the start, where the epoch filter drops already-applied records.
+
+    If the first surviving record after a re-seek skips past
+    ``last_epoch + 1``, the rotation outran this tailer and :class:`WalGap`
+    is raised — the owner must catch up from the snapshot store.
+    """
+
+    def __init__(self, path: str, after_epoch: int = -1):
+        self.path = path
+        self.offset = 0
+        self.last_epoch = int(after_epoch)
+        self._ino = None
+        self.rotations_detected = 0
+        self.records_read = 0
+
+    def poll(self):
+        """Yield ``(epoch, deletes, inserts)`` newly durable since last poll."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            st = os.fstat(f.fileno())  # fstat the fd: no stat/open race
+            if self._ino is not None and (
+                    st.st_ino != self._ino or st.st_size < self.offset):
+                # rotated (new inode) or truncated under us: re-scan from the
+                # start; the epoch filter below deduplicates.
+                self.offset = 0
+                self.rotations_detected += 1
+            self._ino = st.st_ino
+            f.seek(self.offset)
+            while True:
+                line = f.readline()
+                if not line or not line.endswith(b"\n"):
+                    return  # in-flight / torn tail: not yet durable
+                self.offset = f.tell()
+                stripped = line.strip()
+                if not stripped:
+                    continue
+                rec = json.loads(stripped)
+                epoch = int(rec["epoch"])
+                if epoch <= self.last_epoch:
+                    continue
+                # epochs are consecutive; a skip means rotation already
+                # dropped records this tailer still needs.  (A cursor born
+                # at after_epoch<0 tails from the log's own first record.)
+                if self.last_epoch >= 0 and epoch > self.last_epoch + 1:
+                    raise WalGap(
+                        f"WAL at {self.path!r} resumes at epoch {epoch} but "
+                        f"tailer last applied {self.last_epoch}: rotation "
+                        "outran this replica; bootstrap from a snapshot"
+                    )
+                self.last_epoch = epoch
+                self.records_read += 1
+                yield (
+                    epoch,
+                    [tuple(e) for e in rec["del"]],
+                    [tuple(e) for e in rec["ins"]],
+                )
 
 
 class SnapshotStore:
@@ -156,6 +355,18 @@ class SnapshotStore:
         _SNAP_SECONDS.observe(time.perf_counter() - t0)
         _SNAP_WRITES.inc()
         return final
+
+    def latest_epoch(self):
+        """Epoch of the latest snapshot (directory-name parse only), or None.
+
+        Cheap staleness floor for replicas: right after a rotation the WAL
+        can be empty, but the snapshot that triggered it pins the writer's
+        committed epoch from below.
+        """
+        snaps = sorted(
+            n for n in os.listdir(self.root) if n.startswith(self.PREFIX)
+        )
+        return int(snaps[-1][len(self.PREFIX):]) if snaps else None
 
     def latest(self):
         """Return ``(epoch, graph, core, cnt)`` or None when no snapshot."""

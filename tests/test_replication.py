@@ -1,0 +1,496 @@
+"""CQRS replication (DESIGN.md §15): WAL tailing, rotation, read replicas,
+crash-recovery fault-injection matrix, and O(record) replay memory."""
+import json
+import os
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.graph import chung_lu
+from repro.stream import (CoreReplica, CoreService, WalGap, WalTailer,
+                          WriteAheadLog, admit_batch, mixed_stream)
+
+
+def batches(ops, size):
+    return [ops[i : i + size] for i in range(0, len(ops), size)]
+
+
+def make_writer(tmp_path, *, n=800, m=3200, seed=6, snapshot_every=0,
+                block_edges=128):
+    g = chung_lu(n, m, seed=seed)
+    svc = CoreService(
+        g, block_edges=block_edges,
+        wal_path=str(tmp_path / "wal.jsonl"),
+        snapshot_dir=str(tmp_path / "snaps"),
+        snapshot_every=snapshot_every,
+    )
+    return svc, str(tmp_path / "wal.jsonl"), str(tmp_path / "snaps")
+
+
+def make_replica(wal, snaps, **kw):
+    kw.setdefault("block_edges", 128)
+    return CoreReplica(snapshot_dir=snaps, wal_path=wal, **kw)
+
+
+def assert_converged(rep, svc):
+    """The replica serves bit-identical state to the writer at its epoch."""
+    assert rep.epoch == svc.epoch
+    np.testing.assert_array_equal(rep.maintainer.core, svc.maintainer.core)
+    np.testing.assert_array_equal(rep.maintainer.cnt, svc.maintainer.cnt)
+
+
+# ================================================================ WalTailer
+def test_tailer_yields_only_new_complete_records(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    w.append(1, [(0, 1)], [])
+    w.append(2, [], [(2, 3)])
+    t = WalTailer(wal)
+    assert [e for e, _, _ in t.poll()] == [1, 2]
+    assert list(t.poll()) == []  # nothing new
+    w.append(3, [(4, 5)], [(6, 7)])
+    got = list(t.poll())
+    assert got == [(3, [(4, 5)], [(6, 7)])]
+    w.close()
+
+
+def test_tailer_leaves_inflight_tail_for_next_poll(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    w.append(1, [], [(0, 1)])
+    w.close()
+    with open(wal, "a") as f:  # writer mid-append: no trailing newline yet
+        f.write('{"epoch":2,"del":[],"ins":[[2,')
+    t = WalTailer(wal)
+    assert [e for e, _, _ in t.poll()] == [1]
+    off = t.offset
+    assert list(t.poll()) == []  # partial line is not durable
+    with open(wal, "a") as f:  # the append completes
+        f.write('3]]}\n')
+    assert [e for e, _, _ in t.poll()] == [2]
+    assert t.offset > off
+
+
+def test_tailer_resumes_from_after_epoch(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 6):
+        w.append(e, [], [(0, e)])
+    w.close()
+    t = WalTailer(wal, after_epoch=3)
+    assert [e for e, _, _ in t.poll()] == [4, 5]
+
+
+def test_tailer_detects_rotation_and_reseeks_without_duplicates(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 5):
+        w.append(e, [], [(0, e)])
+    t = WalTailer(wal)
+    assert [e for e, _, _ in t.poll()] == [1, 2, 3, 4]
+    assert w.rotate(after_epoch=3) == 3  # epochs 1-3 dropped
+    w.append(5, [], [(0, 5)])
+    got = [e for e, _, _ in t.poll()]
+    assert got == [5]  # epoch 4 survived rotation but was already applied
+    assert t.rotations_detected == 1
+    w.close()
+
+
+def test_tailer_raises_walgap_when_rotation_outran_it(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 4):
+        w.append(e, [], [(0, e)])
+    t = WalTailer(wal)
+    assert [e for e, _, _ in t.poll()] == [1, 2, 3]
+    for e in range(4, 8):
+        w.append(e, [], [(0, e)])
+    w.rotate(after_epoch=6)  # drops 1..6; tailer needs 4 next
+    with pytest.raises(WalGap):
+        list(t.poll())
+    w.close()
+
+
+def test_rotate_is_atomic_and_appends_keep_working(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 6):
+        w.append(e, [(e, e + 1)], [])
+    w.rotate(after_epoch=4)
+    w.append(6, [], [(9, 10)])  # handle was reopened onto the new inode
+    w.close()
+    got = list(WriteAheadLog.replay(wal))
+    assert [e for e, _, _ in got] == [5, 6]
+    assert not os.path.exists(wal + WriteAheadLog.ROTATE_TMP_SUFFIX)
+
+
+def test_stale_rotate_tmp_is_discarded_on_reopen(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    w.append(1, [], [(0, 1)])
+    w.close()
+    tmp = wal + WriteAheadLog.ROTATE_TMP_SUFFIX
+    with open(tmp, "w") as f:  # crash mid-rotation: os.replace never ran
+        f.write('{"epoch":1,"del"')
+    w2 = WriteAheadLog(wal)
+    assert not os.path.exists(tmp)
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1]
+    w2.close()
+
+
+# ============================================================= WAL bugfixes
+def test_replay_is_a_lazy_generator(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 100):
+        w.append(e, [], [(0, e)])
+    w.close()
+    it = WriteAheadLog.replay(wal)
+    assert next(it)[0] == 1  # consuming one record doesn't parse the rest
+    it.close()
+
+
+def test_replay_rejects_mid_log_corruption_but_skips_torn_tail(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    w.append(1, [], [(0, 1)])
+    w.append(2, [], [(0, 2)])
+    w.close()
+    with open(wal, "a") as f:
+        f.write('{"epoch":3,"del":[[1,')  # torn tail: skipped
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2]
+    with open(wal) as f:
+        lines = f.readlines()
+    lines[0] = '{"epoch":1,"del":[[corrupt\n'  # mid-log damage: must raise
+    with open(wal, "w") as f:
+        f.writelines(lines)
+    with pytest.raises(json.JSONDecodeError):
+        list(WriteAheadLog.replay(wal))
+
+
+def test_truncate_torn_tail_streams_from_the_end(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    w.append(1, [], [(0, 1)])
+    w.close()
+    torn = '{"epoch":2,"pad":"' + "x" * 300_000  # torn line > scan chunk
+    with open(wal, "a") as f:
+        f.write(torn)
+    w2 = WriteAheadLog(wal)  # reopen truncates the torn line
+    w2.append(2, [], [(0, 2)])
+    w2.close()
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2]
+
+
+def test_replay_and_truncate_memory_is_o_record_not_o_log(tmp_path):
+    """Peak replay/recovery memory must track one record, not the log size:
+    a ~8 MB log replays within a ~1 MB tracemalloc envelope (readlines or a
+    whole-file read would show up as >= the file size)."""
+    wal = str(tmp_path / "wal.jsonl")
+    w = WriteAheadLog(wal)
+    for e in range(1, 2_001):
+        w.append(e, [(i, i + 1) for i in range(300)],
+                 [(i, i + 2) for i in range(300)])
+    w.close()
+    log_bytes = os.path.getsize(wal)
+    assert log_bytes > 8_000_000
+
+    tracemalloc.start()
+    count = 0
+    for _e, dels, ins in WriteAheadLog.replay(wal):
+        count += len(dels) + len(ins)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert count == 2_000 * 600
+    assert peak < 1_000_000, f"replay peak {peak} vs log {log_bytes}"
+
+    with open(wal, "a") as f:
+        f.write('{"epoch":9999,"del":[[1,')  # torn
+    tracemalloc.start()
+    WriteAheadLog._truncate_torn_tail(wal)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 1_000_000, f"truncate peak {peak} vs log {log_bytes}"
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)][-1] == 2_000
+
+    tracemalloc.start()
+    assert WriteAheadLog.tip_epoch(wal) == 2_000
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < 1_000_000, f"tip_epoch peak {peak} vs log {log_bytes}"
+
+
+def test_tip_epoch_handles_empty_torn_and_blank(tmp_path):
+    wal = str(tmp_path / "wal.jsonl")
+    assert WriteAheadLog.tip_epoch(wal) is None  # missing file
+    open(wal, "w").close()
+    assert WriteAheadLog.tip_epoch(wal) is None  # empty file
+    with open(wal, "w") as f:
+        f.write('{"epoch":7,"del":[],"ins":[]}\n')
+        f.write("\n")  # blank line
+        f.write('{"epoch":8,"del":[')  # torn tail
+    assert WriteAheadLog.tip_epoch(wal) == 7
+    with open(wal, "w") as f:
+        f.write('{"epoch":3,"del":')  # the only line is torn
+    assert WriteAheadLog.tip_epoch(wal) is None
+
+
+def test_wal_stays_bounded_by_rotation_under_snapshots(tmp_path):
+    """The unbounded-growth bugfix: with periodic snapshots, WAL records at
+    or below the snapshot epoch are dropped, so the log length tracks the
+    snapshot interval, not the stream lifetime."""
+    svc, wal, _snaps = make_writer(tmp_path, snapshot_every=3)
+    g0 = svc.bg.materialize()
+    ops, _ = mixed_stream(g0, 360, seed=4)
+    for chunk in batches(ops, 30):  # 12 batches, snapshots at 3,6,9,12
+        svc.ingest(chunk)
+    svc.close()
+    records = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    assert records == []  # epoch 12 snapshot just rotated everything out
+    assert svc.wal.rotations == 4
+
+
+# ================================================================= replicas
+def test_replica_bootstrap_serves_bit_identical_replies(tmp_path):
+    svc, wal, snaps = make_writer(tmp_path)
+    ops, _ = mixed_stream(svc.bg.materialize(), 300, seed=3)
+    chunks = batches(ops, 50)
+    for c in chunks[:3]:
+        svc.ingest(c)
+    svc.snapshot()
+    for c in chunks[3:]:
+        svc.ingest(c)  # WAL tail past the snapshot
+
+    rep = make_replica(wal, snaps)
+    assert_converged(rep, svc)
+    assert rep.last_bootstrap.warm_restart
+    assert rep.last_bootstrap.replayed_batches == len(chunks) - 3
+    nodes = np.arange(svc.bg.n)
+    w_core, r_core = svc.coreness(nodes), rep.coreness(nodes)
+    np.testing.assert_array_equal(r_core, w_core)
+    assert r_core.epoch == w_core.epoch == svc.epoch
+    np.testing.assert_array_equal(rep.top_k(50), svc.top_k(50))
+    np.testing.assert_array_equal(rep.kcore_members(2), svc.kcore_members(2))
+    assert int(rep.degeneracy()) == int(svc.degeneracy())
+    assert rep.in_kcore(int(rep.top_k(1)[0]), int(rep.degeneracy()))
+
+
+def test_replica_tails_incrementally_under_continuous_ingest(tmp_path):
+    svc, wal, snaps = make_writer(tmp_path)
+    svc.snapshot()
+    rep = make_replica(wal, snaps)
+    reader = rep.maintainer.engine.reader
+    ops, _ = mixed_stream(svc.bg.materialize(), 400, seed=5)
+    for i, chunk in enumerate(batches(ops, 40)):
+        svc.ingest(chunk)
+        if i % 3 == 2:  # replica trails, then catches up incrementally
+            assert rep.lag(svc.epoch) == 3
+            assert rep.sync() == 3
+            assert_converged(rep, svc)
+            assert rep.lag(svc.epoch) == 0
+    rep.sync()
+    assert_converged(rep, svc)
+    assert rep.bootstraps == 1  # pure tailing: never re-bootstrapped
+    # tailing replays maintenance, so replica reads edge blocks — but
+    # queries stay zero-I/O (served from the committed views)
+    io0 = (reader.reads, reader.node_table_reads)
+    rep.top_k(10), rep.coreness(0), rep.kcore_members(2)
+    assert (reader.reads, reader.node_table_reads) == io0
+
+
+def test_replica_epoch_view_chain_and_watermarks(tmp_path):
+    svc, wal, snaps = make_writer(tmp_path)
+    svc.snapshot()
+    rep = make_replica(wal, snaps, keep_views=3)
+    ops, _ = mixed_stream(svc.bg.materialize(), 200, seed=8)
+    per_epoch_core = {}
+    for chunk in batches(ops, 40):
+        svc.ingest(chunk)
+        per_epoch_core[svc.epoch] = svc.view().core.copy()
+    rep.sync()
+    assert [v.epoch for v in rep.views] == [3, 4, 5]
+    for e in (3, 4, 5):  # retained views replay the writer's exact history
+        np.testing.assert_array_equal(rep.view_at(e).core, per_epoch_core[e])
+    with pytest.raises(KeyError):
+        rep.view_at(1)  # evicted from the bounded chain
+    assert rep.view().epoch == svc.epoch
+
+
+def test_replica_lag_metrics_and_stats(tmp_path):
+    from repro.obs import metrics as obs
+
+    svc, wal, snaps = make_writer(tmp_path)
+    svc.snapshot()
+    rep = make_replica(wal, snaps, replica_id=7)
+    ops, _ = mixed_stream(svc.bg.materialize(), 120, seed=9)
+    for chunk in batches(ops, 40):
+        svc.ingest(chunk)
+    assert rep.lag() == 3  # probed from the WAL tip, no writer handle needed
+    if obs.obs_enabled():
+        reg = obs.get_registry()
+        assert reg.get("repro_replica_lag").labels(replica="7").value == 3
+        assert reg.get("repro_replica_epoch").labels(replica="7").value == 0
+    rep.sync()
+    assert rep.lag() == 0
+    st = rep.replica_stats()
+    assert st["epoch"] == svc.epoch == 3
+    assert st["lag"] == 0 and st["batches_applied"] == 3
+    assert st["bootstraps"] == 1 and st["replica_id"] == 7
+
+
+def test_replica_rebootstraps_across_rotation_gap(tmp_path):
+    svc, wal, snaps = make_writer(tmp_path)
+    svc.snapshot()
+    rep = make_replica(wal, snaps)
+    for seed in (11, 12, 13):  # rotations march past the sleeping replica
+        ops, _ = mixed_stream(svc.bg.materialize(), 60, seed=seed)
+        svc.ingest(ops)
+        svc.snapshot()
+    ops, _ = mixed_stream(svc.bg.materialize(), 60, seed=14)
+    svc.ingest(ops)
+    rep.sync()  # WalGap inside -> snapshot catch-up -> tail the rest
+    assert rep.bootstraps == 2
+    assert_converged(rep, svc)
+    # and the recovered cursor keeps tailing incrementally afterwards
+    ops, _ = mixed_stream(svc.bg.materialize(), 40, seed=15)
+    svc.ingest(ops)
+    assert rep.sync() == 1
+    assert_converged(rep, svc)
+
+
+def test_replica_requires_a_snapshot(tmp_path):
+    svc, wal, snaps = make_writer(tmp_path)
+    with pytest.raises(RuntimeError, match="snapshot"):
+        make_replica(wal, snaps)
+    svc.close()
+
+
+def test_replica_registered_as_serving_surface():
+    from repro.serve import available_services, service_factory
+
+    assert "core-replica" in available_services()
+    assert service_factory("core-replica") is CoreReplica
+
+
+# ============================================== crash-recovery fault matrix
+def _seeded_writer(tmp_path, *, snapshot_every=0):
+    svc, wal, snaps = make_writer(tmp_path, snapshot_every=snapshot_every)
+    ops, _ = mixed_stream(svc.bg.materialize(), 240, seed=21)
+    chunks = batches(ops, 40)
+    for c in chunks[:2]:
+        svc.ingest(c)
+    svc.snapshot()
+    for c in chunks[2:]:
+        svc.ingest(c)
+    return svc, wal, snaps
+
+
+def _recover_and_replicate(wal, snaps):
+    """The matrix invariant: writer recovery and a fresh replica bootstrap
+    must land on the same exact (core, cnt) in every fault cell."""
+    svc2, rs = CoreService.recover(wal_path=wal, snapshot_dir=snaps,
+                                   block_edges=128)
+    rep = make_replica(wal, snaps)
+    assert_converged(rep, svc2)
+    return svc2, rep, rs
+
+
+def test_fault_kill_between_wal_append_and_apply(tmp_path):
+    svc, wal, snaps = _seeded_writer(tmp_path)
+    # crash after the WAL append but before apply_batch: the record is
+    # durable (and acknowledged by the log) but the state never advanced
+    admitted = admit_batch(
+        mixed_stream(svc.bg.materialize(), 30, seed=22)[0], n=svc.bg.n)
+    svc.wal.append(svc.epoch + 1, admitted.deletes, admitted.inserts)
+    svc.close()
+    svc2, rep, rs = _recover_and_replicate(wal, snaps)
+    assert svc2.epoch == svc.epoch + 1  # the logged batch was replayed
+    assert rs.replayed_batches == 5
+    # recovery's state is exact: it equals re-applying the batch on the
+    # pre-crash writer through the normal ingest path
+    svc.maintainer.apply_batch(admitted.deletes, admitted.inserts,
+                               svc.insert_algorithm)
+    np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
+    np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
+
+
+def test_fault_mid_snapshot_tmp_write(tmp_path):
+    svc, wal, snaps = _seeded_writer(tmp_path)
+    svc.close()
+    tmp = os.path.join(snaps, ".snap_tmp")  # crash mid-snapshot dump
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "core.npy"), "wb") as f:
+        f.write(b"\x93NUMPY garbage")
+    svc2, rep, _ = _recover_and_replicate(wal, snaps)
+    np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
+    np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
+    svc2.snapshot()  # the next snapshot clears the wreckage and publishes
+    assert not os.path.exists(tmp)
+    rep2 = make_replica(wal, snaps)
+    assert_converged(rep2, svc2)
+
+
+def test_fault_mid_rotation(tmp_path):
+    svc, wal, snaps = _seeded_writer(tmp_path)
+    svc.close()
+    # crash mid-rotation: the filtered temp exists, os.replace never ran —
+    # the published WAL is still the full pre-rotation log
+    with open(wal + WriteAheadLog.ROTATE_TMP_SUFFIX, "w") as f:
+        f.write('{"epoch":3,"del":[],"ins"')
+    svc2, rep, rs = _recover_and_replicate(wal, snaps)
+    assert rs.replayed_batches == 4
+    np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
+    np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
+    assert not os.path.exists(wal + WriteAheadLog.ROTATE_TMP_SUFFIX)
+
+
+def test_fault_multi_record_torn_tail(tmp_path):
+    svc, wal, snaps = _seeded_writer(tmp_path)
+    # several durable records land after the snapshot, then the crash tears
+    # the last one mid-append: every complete record must replay, the torn
+    # one must not
+    admitted = admit_batch(
+        mixed_stream(svc.bg.materialize(), 30, seed=23)[0], n=svc.bg.n)
+    svc.wal.append(svc.epoch + 1, admitted.deletes, admitted.inserts)
+    svc.close()
+    with open(wal, "a") as f:
+        f.write('{"epoch":%d,"del":[[1,2],[3' % (svc.epoch + 2))
+    svc2, rep, rs = _recover_and_replicate(wal, snaps)
+    assert svc2.epoch == svc.epoch + 1 and rs.replayed_batches == 5
+    svc.maintainer.apply_batch(admitted.deletes, admitted.inserts,
+                               svc.insert_algorithm)
+    np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
+    np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
+
+
+def test_fault_matrix_replica_converges_under_every_cell(tmp_path):
+    """The full matrix in one sweep: each cell seeds a writer, injects its
+    fault, and requires writer-recovery == replica-bootstrap == oracle."""
+    from repro.core import imcore_bz
+
+    def torn_append(wal_path, epoch):
+        with open(wal_path, "a") as f:
+            f.write('{"epoch":%d,"del":[[0,' % epoch)
+
+    cells = {
+        "append-no-apply": lambda svc, wal, snaps: svc.wal.append(
+            svc.epoch + 1, [], []),
+        "snap-tmp": lambda svc, wal, snaps: os.makedirs(
+            os.path.join(snaps, ".snap_tmp")),
+        "rotate-tmp": lambda svc, wal, snaps: open(
+            wal + WriteAheadLog.ROTATE_TMP_SUFFIX, "w").close(),
+        "torn-tail": lambda svc, wal, snaps: torn_append(wal, svc.epoch + 1),
+    }
+    for name, inject in cells.items():
+        d = tmp_path / name
+        d.mkdir()
+        svc, wal, snaps = _seeded_writer(d)
+        inject(svc, wal, snaps)
+        svc.close()
+        svc2, rep, _ = _recover_and_replicate(wal, snaps)
+        oracle = imcore_bz(svc2.bg.materialize())
+        np.testing.assert_array_equal(svc2.maintainer.core, oracle,
+                                      err_msg=f"cell {name}")
+        np.testing.assert_array_equal(rep.maintainer.core, oracle,
+                                      err_msg=f"cell {name}")

@@ -305,3 +305,77 @@ def test_service_registry_exposes_core_stream():
     assert service_factory("core-stream") is Exported is CoreService
     svc = service_factory("core-stream")(paper_example_graph(), block_edges=16)
     assert svc.degeneracy() == 3
+
+
+# ================================================= watermark epoch semantics
+def _wm(values, epoch):
+    from repro.stream import WatermarkedArray
+
+    a = np.asarray(values).view(WatermarkedArray)
+    a.epoch = epoch
+    return a
+
+
+def test_watermark_views_and_slices_keep_source_epoch():
+    a = _wm([3, 1, 4, 1, 5], epoch=7)
+    assert a[1:4].epoch == 7
+    assert a[a >= 3].epoch == 7
+    assert a.reshape(5, 1).epoch == 7
+    assert a.copy().epoch == 7
+
+
+def test_watermark_derived_arrays_keep_source_epoch():
+    """Deriving from one stamped reply keeps its epoch: `core >= k`,
+    `core + 1`, reductions via ufunc — all still describe epoch-7 state."""
+    a = _wm([3, 1, 4], epoch=7)
+    assert (a + 1).epoch == 7
+    assert (a >= 3).epoch == 7
+    assert (-a).epoch == 7
+    assert np.maximum(a, 2).epoch == 7  # plain operand doesn't constrain
+    assert (a * np.array([1, 2, 3])).epoch == 7
+    assert (2 ** a).epoch == 7  # reflected op keeps the stamp too
+
+
+def test_watermark_same_epoch_operands_keep_epoch():
+    a, b = _wm([1, 2, 3], epoch=4), _wm([4, 5, 6], epoch=4)
+    assert (a + b).epoch == 4
+    assert (a < b).epoch == 4
+
+
+def test_watermark_mixed_epochs_drop_to_none():
+    """The bugfix pin: combining replies from different epochs must not
+    silently inherit one parent's watermark — the result describes no
+    single consistent snapshot."""
+    a, b = _wm([1, 2, 3], epoch=4), _wm([4, 5, 6], epoch=5)
+    assert (a + b).epoch is None
+    assert (a == b).epoch is None
+    assert np.minimum(a, b).epoch is None
+
+
+def test_watermark_unstamped_operand_does_not_constrain():
+    a = _wm([1, 2, 3], epoch=9)
+    from repro.stream import WatermarkedArray
+
+    bare = np.array([7, 8, 9]).view(WatermarkedArray)  # never stamped
+    assert bare.epoch is None
+    assert (a + bare).epoch == 9
+    assert (bare + 1).epoch is None
+
+
+def test_watermark_inplace_ops_restamp_target():
+    a, b = _wm([1, 2, 3], epoch=4), _wm([4, 5, 6], epoch=5)
+    a += 1  # in-place with a constant: still epoch-4 data
+    assert a.epoch == 4
+    a += b  # in-place mix: target no longer describes one epoch
+    assert a.epoch is None
+    np.testing.assert_array_equal(np.asarray(a), [6, 8, 10])
+
+
+def test_watermark_service_replies_compose():
+    svc = CoreService(paper_example_graph(), block_edges=16)
+    svc.ingest([("+", 0, 5)])
+    core = svc.coreness(np.arange(svc.bg.n))
+    assert core.epoch == svc.epoch == 1
+    assert (core >= 2).epoch == 1
+    stale = _wm(np.asarray(core).copy(), epoch=0)
+    assert (core - stale).epoch is None
