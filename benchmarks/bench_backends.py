@@ -9,8 +9,8 @@ converge through identical passes to the identical core array — the script
 asserts it.
 
 Two graphs: the PR 3 comparison cell (n=4k, the history in CHANGES.md) and a
-``large`` ≥200k-directed-edge cell (numpy vs xla vs shard) where the
-device-resident speedup-vs-numpy is the headline number.
+``large`` ≥200k-directed-edge cell (numpy vs xla vs pallas vs shard) where
+the device-resident speedup-vs-numpy is the headline number.
 
 Perf-trajectory gate (scripts/ci.sh):
 
@@ -62,8 +62,14 @@ BACKENDS = ("numpy", "xla", "pallas", "shard")
 
 # trajectory gate: per-backend warm-wall ratio vs numpy (summed over the
 # three algorithms) may grow at most BAND x the committed baseline ratio
-# plus FLOOR; jit-trace counts may never grow at all
+# plus FLOOR; jit-trace counts may never grow at all.  The large cell rides
+# along with fewer warm repeats (walls are seconds, not milliseconds) and
+# without shard (the small cell already gates it; the full --bench matrix
+# still records it) — its job is gating the pallas fused-superstep ratio at
+# a size where per-kernel overheads can't hide.
 TRAJECTORY_CELL = dict(n=1200, m=4800, seed=6, block_edges=128)
+TRAJECTORY_LARGE_CELL = dict(n=25_000, m=110_000, seed=8, block_edges=4096)
+TRAJECTORY_LARGE_BACKENDS = ("numpy", "xla", "pallas")
 TRAJECTORY_WALL_BAND = 1.5
 TRAJECTORY_RATIO_FLOOR = 1.0
 TRAJECTORY_WARM_REPEATS = 3
@@ -215,25 +221,20 @@ def _bench_graph(g, block_edges, backends, label):
 
 
 # ============================================================= trajectory
-def _measure_trajectory() -> dict:
-    """One trajectory section: the 4-backend × 3-algorithm matrix on the
-    trajectory cell, with warm walls best-of-N and numpy-normalized ratios."""
-    import jax
-
-    cell = TRAJECTORY_CELL
+def _trajectory_rows(cell, backends, warm_repeats, label) -> list[dict]:
     g = chung_lu(cell["n"], cell["m"], seed=cell["seed"])
     rows = []
     warm_numpy: dict = {}
-    for backend in BACKENDS:
+    for backend in backends:
         for algo in ALGORITHMS:
             cold, warm, traces, r, delta = _timed(
                 g, algo, backend, cell["block_edges"],
-                warm_repeats=TRAJECTORY_WARM_REPEATS)
+                warm_repeats=warm_repeats)
             if backend == "numpy":
                 warm_numpy[algo] = warm
             # keep the committed BENCH_backends.json schema byte-compatible:
             # iterations are registry-sourced but the row keys are unchanged
-            rec = _reconcile(delta, r, ("traj", backend, algo))
+            rec = _reconcile(delta, r, (label, backend, algo))
             rows.append({
                 "backend": backend,
                 "algorithm": algo,
@@ -245,12 +246,26 @@ def _measure_trajectory() -> dict:
                 "iterations": rec["iterations"],
                 "num_shards": r.num_shards,
             })
-            print(f"[traj] {backend:>6} {algo:<10} warm={warm:7.3f}s "
+            print(f"[{label}] {backend:>6} {algo:<10} warm={warm:7.3f}s "
                   f"cold={cold:7.3f}s traces={traces}")
+    return rows
+
+
+def _measure_trajectory() -> dict:
+    """One trajectory section: the 4-backend × 3-algorithm matrix on the
+    trajectory cell (warm walls best-of-N, numpy-normalized ratios) plus the
+    3-backend matrix on the large cell (single warm repeat)."""
+    import jax
+
+    rows = _trajectory_rows(TRAJECTORY_CELL, BACKENDS,
+                            TRAJECTORY_WARM_REPEATS, "traj")
+    large_rows = _trajectory_rows(TRAJECTORY_LARGE_CELL,
+                                  TRAJECTORY_LARGE_BACKENDS, 1, "traj-large")
     return {
         "device_count": len(jax.devices()),
         "python": f"{sys.version_info[0]}.{sys.version_info[1]}",
         "rows": rows,
+        "large_rows": large_rows,
     }
 
 
@@ -276,6 +291,7 @@ def emit_trajectory() -> None:
         with open(TRAJECTORY_BASELINE) as f:
             data = json.load(f)
     data["cell"] = TRAJECTORY_CELL
+    data["large_cell"] = TRAJECTORY_LARGE_CELL
     data.setdefault("device_counts", {})[str(section["device_count"])] = \
         section
     with open(TRAJECTORY_BASELINE, "w") as f:
@@ -292,6 +308,7 @@ def check_trajectory() -> int:
     os.makedirs(RESULTS, exist_ok=True)
     with open(TRAJECTORY_CURRENT, "w") as f:
         json.dump({"schema": 1, "cell": TRAJECTORY_CELL,
+                   "large_cell": TRAJECTORY_LARGE_CELL,
                    "device_counts": {str(section["device_count"]): section}},
                   f, indent=2)
         f.write("\n")
@@ -308,30 +325,37 @@ def check_trajectory() -> int:
               f"{section['device_count']}; skipping the gate",
               file=sys.stderr)
         return 0
-    cand_agg = _backend_aggregate(section["rows"])
-    base_agg = _backend_aggregate(base["rows"])
     failures = []
-    for backend, (w, nw, traces) in sorted(cand_agg.items()):
-        if backend not in base_agg:
+    for key, tag in (("rows", "gate"), ("large_rows", "gate-large")):
+        if key not in base:
+            print(f"WARN: baseline has no {key!r} section; skipping "
+                  "(re-emit the baseline to gate it)", file=sys.stderr)
             continue
-        bw, bnw, btraces = base_agg[backend]
-        if traces > btraces:
-            failures.append(
-                f"{backend}: jit traces grew {btraces} -> {traces} "
-                "(O(passes)-retrace regression)")
-        if backend == "numpy":
-            continue  # numpy is the normalizer
-        ratio = w / max(nw, 1e-9)
-        base_ratio = bw / max(bnw, 1e-9)
-        limit = TRAJECTORY_WALL_BAND * base_ratio + TRAJECTORY_RATIO_FLOOR
-        status = "ok" if ratio <= limit else "FAIL"
-        print(f"[gate] {backend:>6} warm-vs-numpy ratio {ratio:6.2f} "
-              f"(baseline {base_ratio:6.2f}, limit {limit:6.2f}) {status}")
-        if ratio > limit:
-            failures.append(
-                f"{backend}: warm-wall ratio {ratio:.2f} exceeds "
-                f"{TRAJECTORY_WALL_BAND}x baseline {base_ratio:.2f} + "
-                f"{TRAJECTORY_RATIO_FLOOR}")
+        cand_agg = _backend_aggregate(section[key])
+        base_agg = _backend_aggregate(base[key])
+        for backend, (w, nw, traces) in sorted(cand_agg.items()):
+            if backend not in base_agg:
+                continue
+            bw, bnw, btraces = base_agg[backend]
+            if traces > btraces:
+                failures.append(
+                    f"{tag}/{backend}: jit traces grew {btraces} -> "
+                    f"{traces} (O(passes)-retrace regression)")
+            if backend == "numpy":
+                continue  # numpy is the normalizer
+            ratio = w / max(nw, 1e-9)
+            base_ratio = bw / max(bnw, 1e-9)
+            limit = TRAJECTORY_WALL_BAND * base_ratio \
+                + TRAJECTORY_RATIO_FLOOR
+            status = "ok" if ratio <= limit else "FAIL"
+            print(f"[{tag}] {backend:>6} warm-vs-numpy ratio {ratio:6.2f} "
+                  f"(baseline {base_ratio:6.2f}, limit {limit:6.2f}) "
+                  f"{status}")
+            if ratio > limit:
+                failures.append(
+                    f"{tag}/{backend}: warm-wall ratio {ratio:.2f} exceeds "
+                    f"{TRAJECTORY_WALL_BAND}x baseline {base_ratio:.2f} + "
+                    f"{TRAJECTORY_RATIO_FLOOR}")
     if failures:
         print("perf-trajectory gate FAILED:", file=sys.stderr)
         for msg in failures:
@@ -353,30 +377,34 @@ def summary() -> None:
     with open(path) as f:
         data = json.load(f)
     for dc, section in sorted(data.get("device_counts", {}).items()):
-        cell = data.get("cell", {})
-        print(f"### Backend × algorithm warm wall-clock "
-              f"({dc} device(s), python {section.get('python', '?')}, "
-              f"n={cell.get('n', '?')} cell)\n")
-        print("| backend | " + " | ".join(ALGORITHMS) +
-              " | jit traces | speedup vs numpy |")
-        print("|---|" + "---|" * (len(ALGORITHMS) + 2))
-        by_backend: dict = {}
-        for r in section["rows"]:
-            by_backend.setdefault(r["backend"], {})[r["algorithm"]] = r
-        numpy_total = sum(r["wall_seconds"]
-                          for r in by_backend.get("numpy", {}).values())
-        for backend in BACKENDS:
-            rows = by_backend.get(backend)
-            if not rows:
-                continue
-            walls = " | ".join(
-                f"{rows[a]['wall_seconds']:.3f}s" if a in rows else "-"
-                for a in ALGORITHMS)
-            traces = sum(r["jit_traces"] for r in rows.values())
-            total_w = sum(r["wall_seconds"] for r in rows.values())
-            speed = numpy_total / max(total_w, 1e-9)
-            print(f"| {backend} | {walls} | {traces} | {speed:.2f}x |")
-        print()
+        sources = [(data.get("cell", {}), section.get("rows", []))]
+        if section.get("large_rows"):
+            sources.append((data.get("large_cell", {}),
+                            section["large_rows"]))
+        for cell, sec_rows in sources:
+            print(f"### Backend × algorithm warm wall-clock "
+                  f"({dc} device(s), python {section.get('python', '?')}, "
+                  f"n={cell.get('n', '?')} cell)\n")
+            print("| backend | " + " | ".join(ALGORITHMS) +
+                  " | jit traces | speedup vs numpy |")
+            print("|---|" + "---|" * (len(ALGORITHMS) + 2))
+            by_backend: dict = {}
+            for r in sec_rows:
+                by_backend.setdefault(r["backend"], {})[r["algorithm"]] = r
+            numpy_total = sum(r["wall_seconds"]
+                              for r in by_backend.get("numpy", {}).values())
+            for backend in BACKENDS:
+                rows = by_backend.get(backend)
+                if not rows:
+                    continue
+                walls = " | ".join(
+                    f"{rows[a]['wall_seconds']:.3f}s" if a in rows else "-"
+                    for a in ALGORITHMS)
+                traces = sum(r["jit_traces"] for r in rows.values())
+                total_w = sum(r["wall_seconds"] for r in rows.values())
+                speed = numpy_total / max(total_w, 1e-9)
+                print(f"| {backend} | {walls} | {traces} | {speed:.2f}x |")
+            print()
 
 
 # ================================================================= obs cell
@@ -531,16 +559,16 @@ def main() -> None:
         "identical_passes_across_backends": True,
     }
     if not args.quick:
-        # >= 200k directed edges: the interpret-mode pallas kernels pay a
-        # Python-free but still emulated per-block cost, so the large cell
-        # compares the host reference against the device-resident xla loop
-        # and the on-mesh shard loop
+        # >= 200k directed edges: the host reference vs the device-resident
+        # xla loop, the fused single-kernel pallas superstep (DESIGN.md §16,
+        # still interpret-emulated on CPU), and the on-mesh shard loop
         gl = chung_lu(25_000, 110_000, seed=8)
         assert gl.num_directed >= 200_000
         result["large"] = {
             "graph": {"n": gl.n, "m": gl.m, "block_edges": 4096,
                       "num_blocks": -(-gl.num_directed // 4096)},
-            "runs": _bench_graph(gl, 4096, ("numpy", "xla", "shard"),
+            "runs": _bench_graph(gl, 4096,
+                                 ("numpy", "xla", "pallas", "shard"),
                                  "large"),
         }
     os.makedirs(RESULTS, exist_ok=True)

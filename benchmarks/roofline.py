@@ -170,6 +170,7 @@ def superstep_roofline(quick: bool = False,
     """Achieved-vs-peak bytes/s of the fused superstep, registry-sourced."""
     from repro.core.semicore import decompose
     from repro.graph import chung_lu
+    from repro.kernels import fused_superstep as fsk
     from repro.obs import metrics as obs_metrics
 
     n, m, block_edges = (3_000, 13_000, 512) if quick \
@@ -192,6 +193,7 @@ def superstep_roofline(quick: bool = False,
             "backend": backend,
             "algorithm": "semicore*",
             "graph": {"n": g.n, "m": g.m, "block_edges": block_edges},
+            "fused_kernel": backend == "pallas" and fsk.fused_enabled(),
             "wall_seconds": round(wall, 5),
             "bytes_read": int(nbytes),
             "passes": int(obs_metrics.sum_by_name(
@@ -204,8 +206,12 @@ def superstep_roofline(quick: bool = False,
     return rows
 
 
-def print_superstep(quick: bool = False) -> list[dict]:
-    rows = superstep_roofline(quick)
+def print_superstep(quick: bool = False, fused: bool = False) -> list[dict]:
+    """``fused`` adds the pallas backend (the one-pallas_call-per-pass
+    superstep, DESIGN.md §16) to the sweep and writes a separate JSON so
+    the two modes don't clobber each other in CI."""
+    backends = ("numpy", "xla", "pallas") if fused else ("numpy", "xla")
+    rows = superstep_roofline(quick, backends=backends)
     hdr = (f"{'backend':<8} {'wall_s':>9} {'bytes_read':>12} "
            f"{'achieved GB/s':>14} {'peak GB/s':>10} {'roofline%':>10}")
     print(hdr)
@@ -217,10 +223,27 @@ def print_superstep(quick: bool = False) -> list[dict]:
               f"{r['peak_bytes_per_s'] / 1e9:>10.3f} "
               f"{100 * r['roofline_fraction']:>9.1f}%")
     os.makedirs(SUPERSTEP_RESULTS, exist_ok=True)
-    path = os.path.join(SUPERSTEP_RESULTS, "superstep_roofline.json")
+    name = "fused_superstep_roofline.json" if fused \
+        else "superstep_roofline.json"
+    path = os.path.join(SUPERSTEP_RESULTS, name)
     with open(path, "w") as f:
         json.dump({"rows": rows}, f, indent=2)
         f.write("\n")
+    if fused:
+        # markdown mirror for $GITHUB_STEP_SUMMARY (scripts/ci.sh)
+        md = os.path.join(SUPERSTEP_RESULTS, "fused_superstep_roofline.md")
+        g = rows[0]["graph"]
+        with open(md, "w") as f:
+            f.write(f"### Fused-superstep roofline (semicore*, n={g['n']}, "
+                    f"m={g['m']}, registry-sourced bytes)\n\n")
+            f.write("| backend | fused kernel | warm wall | bytes read | "
+                    "achieved GB/s | roofline |\n|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(f"| {r['backend']} | "
+                        f"{'yes' if r['fused_kernel'] else '-'} | "
+                        f"{r['wall_seconds']:.3f}s | {r['bytes_read']:,} | "
+                        f"{r['achieved_bytes_per_s'] / 1e9:.3f} | "
+                        f"{100 * r['roofline_fraction']:.1f}% |\n")
     print(f"wrote {path}")
     return rows
 
@@ -235,9 +258,12 @@ if __name__ == "__main__":
     ap.add_argument("--superstep", action="store_true",
                     help="registry-sourced achieved-vs-peak bytes/s of the "
                     "fused superstep")
+    ap.add_argument("--fused-superstep", action="store_true",
+                    help="like --superstep but includes the pallas backend "
+                    "(single-kernel fused superstep)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    if args.superstep:
-        print_superstep(quick=args.quick)
+    if args.superstep or args.fused_superstep:
+        print_superstep(quick=args.quick, fused=args.fused_superstep)
     else:
         print_table(args.mesh)

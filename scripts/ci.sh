@@ -30,12 +30,21 @@ REPRO_DEVICE_RESIDENT=0 REPRO_BACKEND=xla \
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/bench_backends.py --smoke
 
-# perf-trajectory regression gate: measure the 4-backend matrix and compare
-# warm-wall ratios + jit-trace counts against the committed
-# BENCH_backends.json baseline (fails on >1.5x warm-wall regression or any
-# jit-trace-count increase; replaces the old "xla <= 40x numpy + 2s" hack).
-# The candidate lands in benchmarks/results/BENCH_backends_current.json for
-# the artifact upload.
+# pallas-fused leg (DESIGN.md §16): the pallas smoke above already runs the
+# fused single-kernel superstep (the default); this one pins the per-probe
+# segment_sum_active oracle path (REPRO_PALLAS_FUSED=0) so the fallback and
+# its accounting parity stay exact too
+REPRO_PALLAS_FUSED=0 REPRO_BACKEND=pallas \
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_backends.py --smoke
+
+# perf-trajectory regression gate: measure the 4-backend matrix on the small
+# cell plus numpy/xla/pallas on the large cell (interpret-mode fused-superstep
+# decompose) and compare warm-wall ratios + jit-trace counts against the
+# committed BENCH_backends.json baseline (fails on >1.5x warm-wall regression
+# or any jit-trace-count increase; replaces the old "xla <= 40x numpy + 2s"
+# hack).  The candidate lands in
+# benchmarks/results/BENCH_backends_current.json for the artifact upload.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/bench_backends.py --check-trajectory
 
@@ -52,6 +61,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/roofline.py --superstep --quick
 
+# fused-superstep roofline (DESIGN.md §16): same registry-sourced sweep with
+# the pallas single-kernel backend included; writes
+# results/fused_superstep_roofline.{json,md} (the .md feeds the step summary)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/roofline.py --fused-superstep --quick
+
 # CI observability: render the backend x algorithm wall-clock table and the
 # telemetry-cell summary into the workflow step summary (no-op outside
 # GitHub Actions)
@@ -59,6 +74,7 @@ if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_backends.py --summary >> "$GITHUB_STEP_SUMMARY"
   cat benchmarks/results/obs_summary.md >> "$GITHUB_STEP_SUMMARY"
+  cat benchmarks/results/fused_superstep_roofline.md >> "$GITHUB_STEP_SUMMARY"
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick

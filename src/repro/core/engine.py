@@ -552,10 +552,18 @@ class PallasBackend(DeviceBackend):
     once per graph version, not per bind (the old per-``apply_batch``
     O(m) ``np.repeat`` rebuild).
 
-    ``interpret=None`` (the default) auto-selects: compiled kernels on a TPU
-    host, the Pallas interpreter everywhere else (the only option on CPU
-    containers).  Kernel blocks are capped at 512 edges (the one-hot matmul
-    window).
+    The hot path fuses the whole superstep into ONE ``pallas_call``
+    (``kernels.fused_superstep``, DESIGN.md §16): both the device-resident
+    fixpoint and the legacy per-pass methods below dispatch a single fused
+    kernel per pass instead of one ``segment_sum_active`` launch per
+    h-index probe (``REPRO_PALLAS_FUSED=0`` restores the per-probe oracle).
+
+    ``interpret=None`` (the default) auto-selects via
+    ``kernels.default_interpret()``: compiled kernels on TPU/GPU hosts, the
+    Pallas interpreter everywhere else (overridable with
+    ``REPRO_PALLAS_INTERPRET``).  Accounting kernel blocks are capped at
+    512 edges; the fused kernel's tile size is independently tunable via
+    ``REPRO_FUSED_BLOCK_EDGES``.
     """
 
     name = "pallas"
@@ -571,11 +579,9 @@ class PallasBackend(DeviceBackend):
         self.passes = 0
 
     def _resolve_interpret(self) -> bool:
-        if self.interpret is not None:
-            return self.interpret
-        import jax
+        from ..kernels import resolve_interpret
 
-        return jax.default_backend() != "tpu"
+        return resolve_interpret(self.interpret)
 
     def _block_edges(self, planner) -> int:
         be = self.block_edges or min(planner.reader.block_edges, 512)
@@ -616,7 +622,7 @@ class PallasBackend(DeviceBackend):
         # don't keep per-pass state alive on a long-lived maintainer between
         # runs; the version-keyed structure cache obeys retain_structure
         for attr in ("seg_ptr", "_rows_j", "_nbr_j",
-                     "_core0_j", "_active_j", "_frontier"):
+                     "_core0_j", "_active_j", "_frontier", "_cnt_cache"):
             if hasattr(self, attr):
                 delattr(self, attr)
         self.release_resident()
@@ -625,6 +631,7 @@ class PallasBackend(DeviceBackend):
         import jax.numpy as jnp
 
         self.passes += 1
+        self._cnt_cache = None  # (thresholds, cnt) from the fused h_index
         self._core0_j = jnp.asarray(np.asarray(core, dtype=np.int32))
         active = np.zeros(self.n, dtype=bool)
         active[np.asarray(frontier, dtype=np.int64)] = True
@@ -654,6 +661,11 @@ class PallasBackend(DeviceBackend):
         }
 
     # -- full-table scans ---------------------------------------------------
+    # Hot path (REPRO_PALLAS_FUSED != 0): ONE pallas_call per superstep —
+    # the fused kernel returns (h, cnt_at_h) together, so the SemiCore*
+    # pass's compute_cnt(thresholds == h) is served from a per-pass cache
+    # with no extra dispatch.  REPRO_PALLAS_FUSED=0 reverts to the PR 3
+    # per-probe dispatch (_pallas_full_ops), kept as the parity oracle.
     def h_index(self, vals, seg_ptr, c_old):
         import jax.numpy as jnp
 
@@ -662,10 +674,21 @@ class PallasBackend(DeviceBackend):
         cmax = int(c_old.max()) if F else 0
         if F == 0 or cmax == 0 or self.E == 0:
             return np.zeros(F, dtype=np.int64)
+        num_probes = int(np.ceil(np.log2(cmax + 2)))
+        from ..kernels import fused_superstep as fsk
+
+        if fsk.fused_enabled():
+            ft = self._resident.fused(fsk.fused_block_edges(self.E))
+            h_j, cnth_j = fsk.fused_hindex(
+                self._core0_j, self._active_j, ft.arrays, dims=ft.dims,
+                num_probes=num_probes, interpret=self._interpret)
+            h = np.asarray(h_j).astype(np.int64)[self._frontier]
+            self._cnt_cache = (
+                h, np.asarray(cnth_j).astype(np.int64)[self._frontier])
+            return h
         hindex, _ = _pallas_full_ops(self.be, self._interpret)
         hi = np.zeros(self.n, dtype=np.int32)
         hi[self._frontier] = c_old
-        num_probes = int(np.ceil(np.log2(cmax + 2)))
         h = hindex(self._core0_j, self._nbr_j, self._rows_j, self._active_j,
                    jnp.asarray(hi), num_probes, self.n)
         return np.asarray(h).astype(np.int64)[self._frontier]
@@ -676,9 +699,24 @@ class PallasBackend(DeviceBackend):
         F = len(self._frontier)
         if F == 0 or self.E == 0:
             return np.zeros(F, dtype=np.int64)
-        _, counts = _pallas_full_ops(self.be, self._interpret)
         thr = np.zeros(self.n, dtype=np.int32)
         thr[self._frontier] = thresholds
+        from ..kernels import fused_superstep as fsk
+
+        if fsk.fused_enabled():
+            cache = getattr(self, "_cnt_cache", None)
+            if cache is not None and np.array_equal(
+                    cache[0], np.asarray(thresholds, dtype=np.int64)):
+                return cache[1]
+            tmax = int(np.max(thresholds)) if F else 0
+            num_probes = max(1, int(np.ceil(np.log2(tmax + 2))))
+            ft = self._resident.fused(fsk.fused_block_edges(self.E))
+            cnt = fsk.fused_counts(
+                self._core0_j, jnp.asarray(thr), self._active_j, ft.arrays,
+                dims=ft.dims, num_probes=num_probes,
+                interpret=self._interpret)
+            return np.asarray(cnt).astype(np.int64)[self._frontier]
+        _, counts = _pallas_full_ops(self.be, self._interpret)
         cnt = counts(self._core0_j, self._nbr_j, self._rows_j, self._active_j,
                      jnp.asarray(thr), self.n)
         return np.asarray(cnt).astype(np.int64)[self._frontier]

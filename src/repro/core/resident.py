@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import lru_cache
 
 import numpy as np
@@ -154,11 +154,26 @@ class ResidentStructure:
     nbr_j: object            # (E,) int32 device — edge targets
     rows_j: object           # (E,) int32 device — edge source per slot
     segptr_j: object         # (n+1,) int32 device — flat-table offsets
+    fused_tables: dict = field(default_factory=dict)
 
     def matches(self, planner) -> bool:
         buffered = planner.eng.buffered
         ver = buffered.version if buffered is not None else 0
         return self.graph is planner.eng.graph and self.version == ver
+
+    def fused(self, block_edges: int):
+        """Compact-rank kernel table for the fused superstep (DESIGN.md
+        §16), built once per (structure, tile size) and cached for the
+        structure's lifetime — the same upload-once contract as the flat
+        edge table above."""
+        ft = self.fused_tables.get(block_edges)
+        if ft is None:
+            from ..kernels.fused_superstep import build_fused_table
+
+            ft = build_fused_table(self.seg_ptr, np.asarray(self.nbr_j),
+                                   self.n, block_edges)
+            self.fused_tables[block_edges] = ft
+        return ft
 
 
 def build_structure(planner) -> ResidentStructure:
@@ -234,7 +249,8 @@ def _substrate(kind: str, block_edges: int, interpret: bool):
 
 
 @lru_cache(maxsize=None)
-def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str):
+def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
+               fused: bool = False):
     """Build + jit the chunked superstep for one substrate × algorithm.
 
     ``num_probes`` / ``num_segments`` / ``chunk`` are static: one compile per
@@ -246,9 +262,106 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str):
     symmetry — edge (v→u) exists iff (u→v) does — as a *sorted* row
     reduction, so the whole superstep runs scatter-free (prefix sums +
     gathers; XLA CPU scatters would serialize it).
+
+    With ``fused`` (the pallas hot path, DESIGN.md §16) each superstep is
+    ONE ``pallas_call`` — ``kernels.fused_superstep.fused_pass`` replaces
+    the whole per-probe body; the scan/cond convergence scaffolding and
+    every returned summary are identical, so the host replay is untouched.
+    The static ``dims`` tuple rides the kernel table (same trace-count
+    contract: only shapes and the probe count retrace).
     """
     import jax
     import jax.numpy as jnp
+
+    if fused:
+        from ..kernels import fused_superstep as fsk
+
+        if algorithm == "semicore":
+            def chunk(core, done, arrs, *, num_probes, num_segments, chunk,
+                      dims):
+                _TRACE_COUNT[0] += 1
+                all_active = jnp.ones((num_segments,), jnp.bool_)
+
+                def run(args):
+                    core, _ = args
+                    core2, _, _, upd = fsk.fused_pass(
+                        core, core, all_active, arrs, dims=dims,
+                        num_probes=num_probes, algorithm="semicore",
+                        interpret=interpret)
+                    return (core2, upd == 0), upd
+
+                def skip(args):
+                    core, done = args
+                    return (core, done), jnp.int32(0)
+
+                def step(carry, _):
+                    core, done = carry
+                    carry2, upd = jax.lax.cond(done, skip, run, (core, done))
+                    return carry2, (upd, ~done)
+
+                (core, done), (upds, ran) = jax.lax.scan(
+                    step, (core, done), None, length=chunk)
+                return core, done, upds, ran
+
+        elif algorithm == "semicore+":
+            def chunk(core, active, arrs, *, num_probes, num_segments, chunk,
+                      dims):
+                _TRACE_COUNT[0] += 1
+
+                def run(args):
+                    core, active = args
+                    core2, _, active2, upd = fsk.fused_pass(
+                        core, core, active, arrs, dims=dims,
+                        num_probes=num_probes, algorithm="semicore+",
+                        interpret=interpret)
+                    return (core2, active2), upd
+
+                def skip(args):
+                    return args, jnp.int32(0)
+
+                def step(carry, _):
+                    _, active = carry
+                    ran = jnp.any(active)
+                    carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                    return carry2, (active, upd, ran)
+
+                (core, active), (fronts, upds, ran) = jax.lax.scan(
+                    step, (core, active), None, length=chunk)
+                done = ~jnp.any(active)
+                return core, active, done, fronts, upds, ran
+
+        elif algorithm == "semicore*":
+            def chunk(core, cnt, active, arrs, *, num_probes, num_segments,
+                      chunk, dims):
+                _TRACE_COUNT[0] += 1
+
+                def run(args):
+                    core, cnt, active = args
+                    core2, cnt2, active2, upd = fsk.fused_pass(
+                        core, cnt, active, arrs, dims=dims,
+                        num_probes=num_probes, algorithm="semicore*",
+                        interpret=interpret)
+                    return (core2, cnt2, active2), upd
+
+                def skip(args):
+                    return args, jnp.int32(0)
+
+                def step(carry, _):
+                    _, _, active = carry
+                    ran = jnp.any(active)
+                    carry2, upd = jax.lax.cond(ran, run, skip, carry)
+                    return carry2, (active, upd, ran)
+
+                (core, cnt, active), (fronts, upds, ran) = jax.lax.scan(
+                    step, (core, cnt, active), None, length=chunk)
+                done = ~jnp.any(active)
+                return core, cnt, active, done, fronts, upds, ran
+
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+
+        return jax.jit(chunk, static_argnames=("num_probes", "num_segments",
+                                               "chunk", "dims"))
 
     for_pass = _substrate(kind, block_edges, interpret)
 
@@ -385,10 +498,24 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str):
 
 
 @lru_cache(maxsize=None)
-def _counts_all_fn(kind: str, block_edges: int, interpret: bool):
+def _counts_all_fn(kind: str, block_edges: int, interpret: bool,
+                   fused: bool = False):
     """Full-table exact-cnt scan (warm_settle's Eq. 2 prologue), resident."""
     import jax
     import jax.numpy as jnp
+
+    if fused:
+        from ..kernels import fused_superstep as fsk
+
+        def counts_all(core, arrs, *, num_segments, num_probes, dims):
+            _TRACE_COUNT[0] += 1
+            all_active = jnp.ones((num_segments,), jnp.bool_)
+            return fsk.fused_counts(core, core, all_active, arrs, dims=dims,
+                                    num_probes=num_probes,
+                                    interpret=interpret)
+
+        return jax.jit(counts_all, static_argnames=("num_segments",
+                                                    "num_probes", "dims"))
 
     for_pass = _substrate(kind, block_edges, interpret)
 
@@ -480,12 +607,31 @@ def run_resident(engine, algorithm: str, backend, *,
     n = engine.n
     rs = backend.bind_resident(planner)
     kind, be, interpret = backend.resident_substrate(planner)
-    # kernel blocks (pallas replay only; be is unused elsewhere)
+    # kernel blocks (pallas replay only; be is unused elsewhere).  The
+    # accounting block size stays the planner's regardless of the fused
+    # kernel's tile size — kernel_blocks_active/skipped replay is the PR 3
+    # coverage formula at ``be`` granularity either way.
     nb = -(-max(rs.E, 1) // be) if kind == "pallas" else 0
     tally = ({"kernel_blocks_active": 0, "kernel_blocks_skipped": 0}
              if kind == "pallas" else None)
     chunk = chunk_len(superstep_chunk)
     om = _pass_obs(algorithm, backend.name)
+
+    if kind == "pallas":
+        from ..kernels import fused_superstep as fsk
+
+        fused = fsk.fused_enabled() and rs.E > 0
+    else:
+        fused = False
+
+    def substrate_args():
+        """Positional + static-kw tail of the chunk fns for this substrate:
+        the fused path ships the compact-rank kernel table, the per-probe
+        paths the flat edge table."""
+        if fused:
+            ft = rs.fused(fsk.fused_block_edges(rs.E))
+            return (ft.arrays,), {"dims": ft.dims}
+        return (rs.nbr_j, rs.rows_j, rs.segptr_j), {}
 
     warm = core is not None
     if warm:
@@ -532,7 +678,12 @@ def run_resident(engine, algorithm: str, backend, *,
                 planner.charge_only(all_nodes)
                 planner.account_node_scan(0, n - 1)
                 _replay_kernel_blocks(tally, rs, be, nb, all_nodes)
-                if rs.E:
+                if rs.E and fused:
+                    counts_all = _counts_all_fn(kind, be, interpret, True)
+                    sargs, skw = substrate_args()
+                    cnt_j = counts_all(core_j, *sargs, num_segments=n,
+                                       num_probes=num_probes, **skw)
+                elif rs.E:
                     counts_all = _counts_all_fn(kind, be, interpret)
                     cnt_j = counts_all(core_j, rs.nbr_j, rs.rows_j,
                                        rs.segptr_j, num_segments=n)
@@ -565,15 +716,17 @@ def run_resident(engine, algorithm: str, backend, *,
         if not active0.any():
             # settled warm state: zero passes, like numpy's while-loop
             return result(core, cnt)
-        fn = _chunk_fns(kind, be, interpret, algorithm)
+        fn = _chunk_fns(kind, be, interpret, algorithm, fused)
+        sargs, skw = substrate_args()
         active_j = jnp.asarray(active0)
         while True:
             with _trace.span("resident.chunk", cat="engine",
                              algorithm="semicore*", backend=backend.name,
                              chunk=chunk) as sp:
                 core_j, cnt_j, active_j, done, fronts, upds, ran = fn(
-                    core_j, cnt_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                    core_j, cnt_j, active_j, *sargs,
+                    num_probes=num_probes, num_segments=n, chunk=chunk,
+                    **skw)
                 iters, comp = _replay_chunk(
                     planner, rs, be, nb, tally, np.asarray(fronts),
                     np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,
@@ -602,15 +755,17 @@ def run_resident(engine, algorithm: str, backend, *,
 
     if algorithm == "semicore":
         # every node, every pass — the final no-update pass included
-        fn = _chunk_fns(kind, be, interpret, algorithm)
+        fn = _chunk_fns(kind, be, interpret, algorithm, fused)
+        sargs, skw = substrate_args()
         done_j = jnp.asarray(False)
         while True:
             with _trace.span("resident.chunk", cat="engine",
                              algorithm="semicore", backend=backend.name,
                              chunk=chunk) as sp:
                 core_j, done_j, upds, ran = fn(
-                    core_j, done_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                    core_j, done_j, *sargs,
+                    num_probes=num_probes, num_segments=n, chunk=chunk,
+                    **skw)
                 ran = np.asarray(ran)
                 upds = np.asarray(upds)
                 for k in range(len(ran)):
@@ -636,15 +791,17 @@ def run_resident(engine, algorithm: str, backend, *,
         return result(core_j, None)
 
     if algorithm == "semicore+":
-        fn = _chunk_fns(kind, be, interpret, algorithm)
+        fn = _chunk_fns(kind, be, interpret, algorithm, fused)
+        sargs, skw = substrate_args()
         active_j = jnp.ones((n,), jnp.bool_)
         while True:
             with _trace.span("resident.chunk", cat="engine",
                              algorithm="semicore+", backend=backend.name,
                              chunk=chunk) as sp:
                 core_j, active_j, done, fronts, upds, ran = fn(
-                    core_j, active_j, rs.nbr_j, rs.rows_j, rs.segptr_j,
-                    num_probes=num_probes, num_segments=n, chunk=chunk)
+                    core_j, active_j, *sargs,
+                    num_probes=num_probes, num_segments=n, chunk=chunk,
+                    **skw)
                 iters, comp = _replay_chunk(
                     planner, rs, be, nb, tally, np.asarray(fronts),
                     np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,

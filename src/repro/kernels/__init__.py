@@ -1,10 +1,53 @@
 """Pallas TPU kernels (interpret-validated on CPU; TPU is the target).
 
-segsum       -- blocked one-hot-matmul segment sum (edge scans: LocalCore
-                counts, GNN aggregation, bag pooling)
-embedding_bag-- scalar-prefetch gather-pool (recsys tables)
-flash_decode -- blocked long-KV decode attention (long_500k cells)
-"""
-from .ops import segment_sum, segment_sum_active, embedding_bag, flash_decode
+segsum         -- blocked one-hot-matmul segment sum (edge scans: LocalCore
+                  counts, GNN aggregation, bag pooling)
+embedding_bag  -- scalar-prefetch gather-pool (recsys tables)
+flash_decode   -- blocked long-KV decode attention (long_500k cells)
+fused_superstep-- the whole decomposition superstep as ONE pallas_call
+                  (h-index histogram, cnt refresh, push rule, convergence
+                  flag) with activity-masked block DMA (DESIGN.md §16)
 
-__all__ = ["segment_sum", "segment_sum_active", "embedding_bag", "flash_decode"]
+``default_interpret`` is the single policy for the historical scattered
+``interpret: bool = True`` kernel defaults: compiled lowering on real
+accelerators, the Pallas interpreter elsewhere, ``REPRO_PALLAS_INTERPRET``
+forcing either way.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["segment_sum", "segment_sum_active", "embedding_bag",
+           "flash_decode", "default_interpret", "resolve_interpret",
+           "INTERPRET_ENV_VAR"]
+
+INTERPRET_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for every kernel in this package.
+
+    ``REPRO_PALLAS_INTERPRET`` (0/false vs anything else) wins when set;
+    otherwise kernels lower for real on TPU/GPU hosts and fall back to the
+    Pallas interpreter on CPU containers (the only option there).  This
+    replaces the old per-signature ``interpret: bool = True`` defaults that
+    silently emulated on real hardware.
+    """
+    env = os.environ.get(INTERPRET_ENV_VAR)
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    import jax
+
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> :func:`default_interpret`; explicit values pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+# Bound eagerly (as the functions, not the same-named submodules — the
+# function binding must shadow e.g. the embedding_bag module).  This import
+# sits *below* resolve_interpret because the kernel modules resolve their
+# ``interpret=None`` defaults through this package at call time.
+from .ops import segment_sum, segment_sum_active, embedding_bag, flash_decode  # noqa: E402

@@ -36,9 +36,14 @@ def embedding_bag_pallas(
     indices: jax.Array,    # (B, L) int32; negative = masked slot
     weights: jax.Array,    # (B, L) float32 per-slot weights
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Sum-pooled bags: out[b] = sum_l weights[b,l] * table[indices[b,l]]."""
+    """Sum-pooled bags: out[b] = sum_l weights[b,l] * table[indices[b,l]].
+
+    ``interpret`` -- None defers to ``kernels.default_interpret()``.
+    """
+    from . import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, L = indices.shape
     N, D = table.shape
     safe_idx = jnp.maximum(indices, 0).astype(jnp.int32)

@@ -63,8 +63,10 @@ def flash_decode_pallas(
     cache_len: jax.Array,  # () int32 — valid prefix of S
     *,
     block_kv: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from . import resolve_interpret
+    interpret = resolve_interpret(interpret)
     H, d = q.shape
     Hkv, S, _ = k.shape
     assert H % Hkv == 0 and S % block_kv == 0

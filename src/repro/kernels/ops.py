@@ -28,7 +28,7 @@ def segment_sum(
     *,
     block_edges: int = 512,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Segment-sum over *sorted* rows; (E,) or (E, D) values -> (n[, D]).
 
@@ -81,7 +81,7 @@ def make_superstep_segsum(
     num_segments: int,
     *,
     block_edges: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Superstep-granular entry to the block-skipping segment-sum.
 
@@ -146,7 +146,7 @@ def segment_sum_active(
     num_segments: int,
     *,
     block_edges: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Block-skipping segment-sum (SemiCore*'s saved I/O on TPU).
 
@@ -169,7 +169,7 @@ def embedding_bag(
     *,
     mode: str = "sum",
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """EmbeddingBag: out[b] = pool_l w[b,l] * table[idx[b,l]]; idx<0 masked."""
     B, L = indices.shape
@@ -195,7 +195,7 @@ def flash_decode(
     *,
     block_kv: int = 512,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Single-token GQA decode attention over a long KV cache."""
     if not use_pallas:

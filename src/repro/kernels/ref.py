@@ -24,6 +24,61 @@ def embedding_bag_ref(
     return out
 
 
+def fused_superstep_ref(core, cnt, active, nbr, rows, num_segments: int,
+                        algorithm: str):
+    """Oracle for fused_superstep: one batch superstep in plain jnp.
+
+    Mirrors the resident reference pass (core/resident.py) formula for
+    formula — hindex via eager binary search over segment counts, refreshed
+    cnt via a >=-threshold segment sum, the semicore* push rule, the
+    semicore+ touched rule.  Eager-only (num_probes is derived from the
+    data); returns ``(core2, cnt2, active2, upd)`` as int/bool arrays.
+    """
+    core = jnp.asarray(core, jnp.int32)
+    cnt = jnp.asarray(cnt, jnp.int32) if cnt is not None else None
+    active = jnp.asarray(active, bool)
+    nbr = jnp.asarray(nbr, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    n = int(num_segments)
+    nbr_vals = jnp.take(core, nbr, mode="clip")
+    c_old = jnp.where(active, core, 0)
+
+    def count_ge(thresholds):
+        ok = nbr_vals >= jnp.take(thresholds, rows, mode="clip")
+        return segment_sum_ref(ok.astype(jnp.int32), rows, n)
+
+    cmax = int(jnp.max(c_old)) if n else 0
+    h = jnp.zeros(n, jnp.int32)
+    step = 1
+    while step <= cmax:
+        step <<= 1
+    step >>= 1
+    while step >= 1:
+        cand = jnp.minimum(h + step, c_old)
+        h = jnp.where(count_ge(cand) >= cand, cand, h)
+        step >>= 1
+
+    core2 = jnp.where(active, h, core)
+    upd = jnp.sum((active & (h != core)).astype(jnp.int32))
+    if algorithm == "semicore":
+        return core2, cnt, active, upd
+    if algorithm == "semicore+":
+        changed = active & (h != core)
+        touched = segment_sum_ref(
+            jnp.take(changed, nbr, mode="clip").astype(jnp.int32), rows, n)
+        return core2, cnt, (touched > 0) & (core2 > 0), upd
+    thr = jnp.where(active, h, 0)
+    refreshed = count_ge(thr)
+    c2_row = jnp.take(core2, rows, mode="clip")
+    act_nbr = jnp.take(active, nbr, mode="clip")
+    h_nbr = jnp.take(h, nbr, mode="clip")
+    c_old_nbr = jnp.take(core, nbr, mode="clip")
+    push = act_nbr & (c2_row > h_nbr) & (c2_row <= c_old_nbr)
+    dec = segment_sum_ref(push.astype(jnp.int32), rows, n)
+    cnt2 = jnp.where(active, refreshed, cnt) - dec
+    return core2, cnt2, (cnt2 < core2) & (core2 > 0), upd
+
+
 def flash_decode_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, cache_len: jax.Array
 ) -> jax.Array:

@@ -41,13 +41,16 @@ def _segsum_block_kernel(compact_ref, vals_ref, out_ref, *, block_edges: int):
 
 def segsum_pallas_partials(
     vals: jax.Array, compact: jax.Array, *, block_edges: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Run the blocked kernel; returns (num_blocks, BE, D) window partials.
 
     ``vals``    -- (E, D) float32, E a multiple of block_edges.
     ``compact`` -- (E, 1) int32 dense sorted segment ranks.
+    ``interpret`` -- None defers to ``kernels.default_interpret()``.
     """
+    from . import resolve_interpret
+    interpret = resolve_interpret(interpret)
     E, D = vals.shape
     assert E % block_edges == 0, (E, block_edges)
     nb = E // block_edges

@@ -44,9 +44,14 @@ def segsum_active_partials(
     block_active: jax.Array,  # (num_blocks,) int32 — 0 skips the block
     *,
     block_edges: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Window partials like segsum, but inactive blocks are never fetched."""
+    """Window partials like segsum, but inactive blocks are never fetched.
+
+    ``interpret`` -- None defers to ``kernels.default_interpret()``.
+    """
+    from . import resolve_interpret
+    interpret = resolve_interpret(interpret)
     E, D = vals.shape
     assert E % block_edges == 0
     nb = E // block_edges
