@@ -20,6 +20,7 @@ same watermarked query replies.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -31,6 +32,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
 
 from repro.core import decompose  # noqa: E402
+from repro.faults import FaultPlan, FaultRule, inject  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
 from repro.obs import metrics as obs_metrics  # noqa: E402
 from repro.obs.bench import shared_result  # noqa: E402
@@ -62,6 +64,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="1 writer + 2 replicas, bounded-lag assertion (CI)")
     ap.add_argument("--replicas", type=int, default=None)
+    ap.add_argument("--wal-append-latency-ms", type=float, default=0.0,
+                    help="inject this much latency into every WAL append "
+                         "(seeded FaultPlan); the lag and bit-identity "
+                         "gates must hold with slow appends too")
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FULL") == "1" and not args.smoke
 
@@ -85,7 +91,14 @@ def main() -> None:
     chunks = [ops[i:i + batch] for i in range(0, len(ops), batch)]
     rng = np.random.default_rng(3)
 
-    with tempfile.TemporaryDirectory() as tmp:
+    plan = None
+    fault_ctx = contextlib.nullcontext()
+    if args.wal_append_latency_ms > 0:
+        plan = FaultPlan([FaultRule("wal.append", "latency", every=1,
+                                    arg=args.wal_append_latency_ms / 1e3)])
+        fault_ctx = inject(plan)
+
+    with fault_ctx, tempfile.TemporaryDirectory() as tmp:
         wal = os.path.join(tmp, "wal.jsonl")
         snaps = os.path.join(tmp, "snaps")
         writer = CoreService(g, wal_path=wal, snapshot_dir=snaps,
@@ -182,6 +195,14 @@ def main() -> None:
             "obs": shared_result("replication/writer+replicas",
                                  update_s + sync_s + query_s, delta),
         }
+        rows["wal_append_latency_ms"] = args.wal_append_latency_ms
+        rows["faults_injected_total"] = plan.total_injected if plan else 0
+        rows["faults_injected"] = (
+            {f"{op}/{kind}": cnt for (op, kind), cnt in plan.injected.items()}
+            if plan else {})
+        if plan is not None:  # every append was slowed, and all were counted
+            assert plan.total_injected == writer.wal.appends, \
+                (plan.total_injected, writer.wal.appends)
         writer.close()
 
     print("name,us_per_call,derived")
@@ -194,6 +215,9 @@ def main() -> None:
     print(f"replication/lag,{rows['lag_mean']:.2f},"
           f"p95={rows['lag_p95']:.1f};max={rows['lag_max']};"
           f"bootstraps={rows['replica_bootstraps']}")
+    if plan is not None:
+        print(f"replication/faults,{rows['faults_injected_total']},"
+              f"wal_append_latency_ms={args.wal_append_latency_ms:g}")
 
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "replication.json"), "w") as f:

@@ -28,9 +28,88 @@ from repro.core import decompose  # noqa: E402
 from repro.graph import chung_lu  # noqa: E402
 from repro.obs import metrics as obs_metrics  # noqa: E402
 from repro.obs.bench import shared_result  # noqa: E402
-from repro.stream import CoreService, mixed_stream  # noqa: E402
+from repro.stream import (CoreService, CoreWriter, Overloaded,  # noqa: E402
+                          mixed_stream)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run_overload(quick: bool) -> dict:
+    """Admission-control cell (DESIGN.md §17): oversized bursts against a
+    budgeted writer.  Bursts cycle through the three admission stages —
+    under the soft budget (apply now), between soft and hard (bounded-
+    staleness deferral) and over the hard budget (typed ``Overloaded``
+    shed) — and the cell reports accepted-updates/s, the shed rate and the
+    p99 admission latency.  Ends with the usual correctness gate: after a
+    draining snapshot the streamed ``core`` must equal a fresh decompose.
+    """
+    if quick:
+        n, m, budget, bursts = 3_000, 12_000, 240, 45
+    else:
+        n, m, budget, bursts = 10_000, 60_000, 400, 90
+    # stage-0 / stage-1 / shed burst sizes, cycled in that order
+    sizes = [budget // 3, (budget * 4) // 5, (budget * 3) // 2]
+    g = chung_lu(n, m, seed=1)
+    ops, _ = mixed_stream(g, sum(sizes) * (bursts // 3 + 1), seed=2)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        w = CoreWriter(
+            g,
+            wal_path=os.path.join(tmp, "wal.jsonl"),
+            snapshot_dir=os.path.join(tmp, "snaps"),
+            admission_budget=budget,
+            admission_soft_ratio=0.5,
+            admission_max_defer=4,
+        )
+        walls = []
+        offered = accepted_updates = deferred_batches = 0
+        pos = 0
+        ingest_s = 0.0
+        for b in range(bursts):
+            size = sizes[b % len(sizes)]
+            chunk = ops[pos : pos + size]
+            pos += size
+            offered += len(chunk)
+            t0 = time.perf_counter()
+            try:
+                stats = w.ingest(chunk)
+                wall = time.perf_counter() - t0
+                accepted_updates += len(chunk)
+                deferred_batches += stats.deferred
+            except Overloaded:
+                wall = time.perf_counter() - t0
+            walls.append(wall)
+            ingest_s += wall
+        w.snapshot()  # drain the pending pool: epoch catches the WAL tip
+        assert w.epoch == w._wal_tip
+        health = w.health()
+        assert health["status"] == "ok", health
+
+        final = w.bg.materialize()
+        ref = decompose(final, "semicore*", "batch")
+        assert np.array_equal(w.maintainer.core, ref.core), \
+            "overloaded stream != decompose"
+
+        adm = w.admission.state()
+        wq = np.asarray(walls)
+        shed = adm["rejected_updates"]
+        row = {
+            "n": n, "m": m, "budget": budget, "bursts": bursts,
+            "burst_sizes": sizes,
+            "offered_updates": offered,
+            "accepted_updates": accepted_updates,
+            "accepted_updates_per_s": accepted_updates / ingest_s,
+            "shed_updates": shed,
+            "shed_batches": adm["rejected_batches"],
+            "shed_rate": shed / max(offered, 1),
+            "deferred_batches": deferred_batches,
+            "coalesced_updates": adm["coalesced"],
+            "admission_p50_ms": float(np.percentile(wq, 50) * 1e3),
+            "admission_p99_ms": float(np.percentile(wq, 99) * 1e3),
+            "final_epoch": int(w.epoch),
+        }
+        w.close()
+    return row
 
 
 def query_burst(svc: CoreService, rng, num_queries: int) -> int:
@@ -50,8 +129,32 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small sizes for CI smoke runs")
+    ap.add_argument("--overload", action="store_true",
+                    help="admission-backpressure cell only: oversized "
+                         "bursts against a budgeted writer")
     args = ap.parse_args()
     full = os.environ.get("REPRO_BENCH_FULL") == "1" and not args.quick
+
+    if args.overload:
+        row = run_overload(quick=args.quick or not full)
+        print("name,us_per_call,derived")
+        print(f"stream/overload,{row['admission_p50_ms'] * 1e3:.1f},"
+              f"accepted_per_s={row['accepted_updates_per_s']:.0f};"
+              f"shed_rate={row['shed_rate']:.3f};"
+              f"p99_admission_ms={row['admission_p99_ms']:.2f}")
+        os.makedirs(RESULTS, exist_ok=True)
+        path = os.path.join(RESULTS, "stream.json")
+        merged = {}
+        if os.path.exists(path):  # ride alongside the mixed-workload rows
+            with open(path) as f:
+                merged = json.load(f)
+        merged["overload"] = row
+        with open(path, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"# verified: overloaded stream == decompose(final) with "
+              f"{row['shed_batches']} shed and {row['deferred_batches']} "
+              f"deferred batches", file=sys.stderr)
+        return
 
     if full:  # the ISSUE acceptance workload
         n, m, num_updates, batch = 30_000, 200_000, 10_000, 200

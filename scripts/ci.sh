@@ -85,6 +85,28 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --qu
 # final epoch; results/replication.json rides the artifact upload.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_replication.py --smoke
 
+# chaos leg (DESIGN.md §17): the fixed-seed fault-injection soak — a writer
+# plus two replicas under a seeded randomized schedule of injected I/O
+# errors, torn writes, bit flips, lying fsyncs and ENOSPC; every seed must
+# end bit-identical to the in-memory oracle with every injected fault
+# visible in repro_faults_injected_total.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m pytest tests/test_faults.py -q -k chaos_soak
+
+# the replication smoke re-run with 2ms of injected WAL-append latency: the
+# bounded-lag and bit-identity gates must hold while appends are slow, and
+# the run must account every slowed append in the fault counters (asserted
+# inside the bench); the admission-backpressure overload cell rides along,
+# merging into results/stream.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_replication.py --smoke --wal-append-latency-ms 2
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_stream.py --quick --overload
+if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/fault_summary.py >> "$GITHUB_STEP_SUMMARY"
+fi
+
 # out-of-core smoke: build a ~1M-edge graph from chunks in a temp dir,
 # memmap-load it, decompose, and compare against the in-memory build
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_outofcore.py --smoke

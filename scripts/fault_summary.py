@@ -1,0 +1,64 @@
+"""Render the chaos-leg fault counters as a markdown step summary.
+
+Reads ``benchmarks/results/replication.json`` (fault-injection counters
+from the ``--wal-append-latency-ms`` smoke) and the ``overload`` block of
+``benchmarks/results/stream.json`` (admission-backpressure cell) and
+prints a small markdown report for ``$GITHUB_STEP_SUMMARY``.  Missing
+files are skipped, so the script is safe to run on partial CI legs.
+
+  PYTHONPATH=src python scripts/fault_summary.py >> "$GITHUB_STEP_SUMMARY"
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "results")
+
+
+def _load(name: str) -> dict | None:
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    print("## Fault injection / durability (DESIGN.md §17)\n")
+
+    rep = _load("replication.json")
+    if rep and rep.get("faults_injected_total"):
+        print(f"Replication smoke under "
+              f"{rep.get('wal_append_latency_ms', 0):g} ms injected "
+              f"WAL-append latency — lag p95 {rep['lag_p95']:.1f}, "
+              f"max {rep['lag_max']} (bounded), "
+              f"{rep['replicas']} replicas bit-identical at epoch "
+              f"{rep['epochs']}.\n")
+        print("| fault (op/kind) | injections |")
+        print("|---|---|")
+        for key, cnt in sorted(rep.get("faults_injected", {}).items()):
+            print(f"| `{key}` | {cnt} |")
+        print(f"| **total** | **{rep['faults_injected_total']}** |")
+        print()
+    else:
+        print("_no replication fault-injection results_\n")
+
+    stream = _load("stream.json")
+    over = (stream or {}).get("overload")
+    if over:
+        print("Admission backpressure (overload cell): "
+              f"{over['accepted_updates_per_s']:.0f} accepted updates/s, "
+              f"shed rate {over['shed_rate']:.3f} "
+              f"({over['shed_batches']} batches), "
+              f"{over['deferred_batches']} deferred batches, "
+              f"p99 admission latency {over['admission_p99_ms']:.2f} ms "
+              f"(budget {over['budget']}).\n")
+    else:
+        print("_no overload-cell results_\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,9 +99,11 @@ class CoreMaintainer:
         pool_blocks: int = 1,
         backend=None,
         superstep_chunk: int | None = None,
+        retry=None,
     ):
         self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
-        self.engine = HostEngine(self.bg, block_edges, pool_blocks=pool_blocks)
+        self.engine = HostEngine(
+            self.bg, block_edges, pool_blocks=pool_blocks, retry=retry)
         self.backend = resolve_backend(backend)
         self.superstep_chunk = superstep_chunk
         if self.backend.device_resident and not isinstance(

@@ -77,6 +77,7 @@ class HostEngine:
         graph,
         block_edges: int = DEFAULT_BLOCK_EDGES,
         pool_blocks: int = 1,
+        retry=None,
     ):
         if isinstance(graph, BufferedGraph):
             self.buffered: BufferedGraph | None = graph
@@ -85,7 +86,8 @@ class HostEngine:
             self.buffered = None
             base = graph
         self.graph = base
-        self.reader = BlockReader(base, block_edges, pool_blocks=pool_blocks)
+        self.reader = BlockReader(
+            base, block_edges, pool_blocks=pool_blocks, retry=retry)
         self.planner = PassPlanner(self)
 
     # ------------------------------------------------------------------ reads

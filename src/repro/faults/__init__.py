@@ -1,0 +1,36 @@
+"""Deterministic fault injection + resilience policies (DESIGN.md §17).
+
+The paper's headline — decomposing a 42.6B-edge graph in 4.2 GB — is a
+*disk-backed* claim, and disk-backed systems fail in ways clean unit tests
+never exercise: torn writes, bit rot, transient ``EIO``, ``ENOSPC``, drives
+that acknowledge an fsync they never performed.  This package makes those
+failures a first-class, reproducible test input:
+
+* :mod:`plan` — ``FaultPlan``/``FaultRule``: a seeded, scriptable schedule
+  of faults keyed by *operation count* (the Nth WAL append, the Kth block
+  read), so a test can place a fault at an exact point or run a randomized
+  chaos schedule that is bit-reproducible from one integer seed;
+* :mod:`fs` — the injection surface: every filesystem touch of the
+  durability stack (``stream/wal.py`` appends/fsyncs/rotations, snapshot
+  publish/load, ``BlockReader`` block fills) calls a hook here.  With no
+  plan installed the hooks are a single ``is None`` check — zero overhead
+  on the production path.  Also hosts the power-loss simulator behind the
+  lying-fsync mode (un-fsynced bytes and directory entries are lost);
+* :mod:`retry` — the hardening the faults exercise: ``RetryPolicy``
+  (jittered exponential backoff with a retry budget and deadline) and
+  ``CircuitBreaker`` (consecutive-failure trip, used by replica sync to
+  fall back to a full bootstrap).
+
+Injected faults surface as :class:`FaultInjected` (an ``IOError`` subclass,
+so production retry/except paths treat them exactly like real I/O errors)
+and are counted in ``repro_faults_injected_total{op,kind}``.
+"""
+from .plan import (FAULT_KINDS, FaultInjected, FaultPlan, FaultRule)
+from .fs import (active_plan, flip_bit, inject, simulate_power_loss)
+from .retry import CircuitBreaker, RetryPolicy
+
+__all__ = [
+    "FAULT_KINDS", "FaultInjected", "FaultPlan", "FaultRule",
+    "active_plan", "flip_bit", "inject", "simulate_power_loss",
+    "CircuitBreaker", "RetryPolicy",
+]

@@ -29,6 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..faults import fs as _faults
 from ..obs import metrics as _metrics
 
 __all__ = [
@@ -220,10 +221,12 @@ class BlockReader:
         graph: CSRGraph,
         block_edges: int = DEFAULT_BLOCK_EDGES,
         pool_blocks: int = 1,
+        retry=None,
     ):
         self.graph = graph
         self.block_edges = int(block_edges)
         self.pool_blocks = max(1, int(pool_blocks))
+        self.retry = retry  # optional faults.RetryPolicy for block fills
         self.reads = 0  # edge-table block read I/Os
         self.node_table_reads = 0  # node-table block read I/Os
         self.hits = 0  # pool hits (reads answered from a resident block)
@@ -340,6 +343,26 @@ class BlockReader:
         for b in blocks[max(0, k - P):].tolist():
             pool[b] = None
 
+    def _fill_span(self, first: int, last: int) -> list[int]:
+        """Touch blocks ``first..last``, fetching the missing ones.
+
+        The fetch point (the fault hook, standing in for the disk read) runs
+        *before* a missing block is charged or made resident, so a failed
+        fill leaves no pool entry and no I/O charge behind — a retried read
+        misses again, is charged exactly once, and the
+        hits + evictions = reads - pool-growth reconciliation stays exact.
+        Blocks already filled earlier in the span stay resident across a
+        mid-span failure: their data really did arrive, and the retry
+        legitimately hits them.
+        """
+        filled: list[int] = []
+        for b in range(first, last + 1):
+            if b not in self._pool:
+                _faults.on_op("block.read")  # may raise a transient IOError
+                filled.append(b)
+            self._touch(b)
+        return filled
+
     def load_neighbors(self, v: int) -> np.ndarray:
         """Load nbr(v), touching every block the adjacency list spans."""
         lo = int(self.graph.indptr[v])
@@ -347,8 +370,22 @@ class BlockReader:
         if hi > lo:
             first = lo // self.block_edges
             last = (hi - 1) // self.block_edges
-            for b in range(first, last + 1):
-                self._touch(b)
+            if self.retry is None:
+                filled = self._fill_span(first, last)
+            else:
+                filled = self.retry.call(
+                    self._fill_span, first, last, op="block.read")
+            try:
+                return self.graph.adj[lo:hi]
+            except OSError:
+                # a block charged as read never delivered its bytes (memmap
+                # page-in failure): invalidate this call's fills and undo
+                # their charges so residency never lies about disk state.
+                for b in filled:
+                    if b in self._pool:
+                        del self._pool[b]
+                        self.reads -= 1
+                raise
         return self.graph.adj[lo:hi]
 
     def account_node_table_scan(self, v_lo: int, v_hi: int) -> None:

@@ -11,6 +11,8 @@ WAL + snapshots give crash recovery via warm restart (DESIGN.md §9); the WAL
 rotates on snapshot publish so the log size tracks the snapshot interval.
 """
 from .admission import AdmittedBatch, admit_batch
+from .backpressure import AdmissionController, Overloaded
+from .integrity import CorruptionError, crc32c
 from .replica import BootstrapStats, CoreReplica
 from .service import (BatchStats, CoreService, CoreWriter, EpochView,
                       QueryAPI, RecoveryStats, Watermarked, WatermarkedArray)
@@ -19,6 +21,8 @@ from .workload import mixed_stream
 
 __all__ = [
     "AdmittedBatch", "admit_batch",
+    "AdmissionController", "Overloaded",
+    "CorruptionError", "crc32c",
     "BatchStats", "CoreService", "CoreWriter", "CoreReplica", "EpochView",
     "QueryAPI", "RecoveryStats", "BootstrapStats",
     "Watermarked", "WatermarkedArray",

@@ -38,11 +38,12 @@ from dataclasses import dataclass
 from ..core.engine import warm_settle
 from ..core.maintenance import CoreMaintainer
 from ..core.semicore import HostEngine
+from ..faults import CircuitBreaker
 from ..graph.storage import DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from ..obs import metrics as _metrics, trace as _trace
 from .service import EpochView, QueryAPI, _LRUCache
-from .wal import SnapshotStore, WalGap, WalTailer, WriteAheadLog
+from .wal import CorruptionError, SnapshotStore, WalGap, WalTailer, WriteAheadLog
 
 __all__ = ["CoreReplica", "BootstrapStats"]
 
@@ -64,6 +65,10 @@ _REPLICA_BOOTSTRAPS = _metrics.counter(
     "repro_replica_bootstraps_total",
     "Replica bootstraps (snapshot + structural tail replay + warm settle); "
     "first one is construction, later ones are WalGap catch-ups")
+_REPLICA_SYNC_FAILURES = _metrics.counter(
+    "repro_replica_sync_failures_total",
+    "sync() attempts that failed (transient I/O, gap, or corruption) and "
+    "left the replica serving its last good epoch")
 
 
 @dataclass
@@ -105,6 +110,8 @@ class CoreReplica(QueryAPI):
         cache_size: int = 256,
         replica_id: int = 0,
         keep_views: int = 4,
+        retry=None,
+        breaker_trip_after: int = 3,
     ):
         self.snapshots = SnapshotStore(snapshot_dir)
         self.wal_path = wal_path
@@ -115,6 +122,11 @@ class CoreReplica(QueryAPI):
         self._superstep_chunk = superstep_chunk
         self.replica_id = int(replica_id)
         self.keep_views = max(int(keep_views), 1)
+        self.retry = retry  # optional faults.RetryPolicy for polls/loads
+        self.breaker = CircuitBreaker(trip_after=breaker_trip_after)
+        self.stale_serving = False  # last sync/bootstrap failed: views frozen
+        self.sync_failures = 0
+        self.bootstrap_failures = 0
         self.cache = _LRUCache(cache_size)
         self.views: list[EpochView] = []  # newest last, bounded chain
         self.bootstraps = 0
@@ -127,6 +139,7 @@ class CoreReplica(QueryAPI):
         self._batches_ctr = _REPLICA_BATCHES.labels(**_lbl)
         self._sync_hist = _REPLICA_SYNC_SECONDS.labels(**_lbl)
         self._bootstraps_ctr = _REPLICA_BOOTSTRAPS.labels(**_lbl)
+        self._sync_failures_ctr = _REPLICA_SYNC_FAILURES.labels(**_lbl)
         self._bootstrap()
 
     # ------------------------------------------------------------ bootstrap
@@ -158,7 +171,11 @@ class CoreReplica(QueryAPI):
         self.lag()
 
     def _bootstrap_once(self) -> None:
-        snap = self.snapshots.latest()
+        if self.retry is None:
+            snap = self.snapshots.latest()
+        else:  # transient load failures retry; CorruptionError falls through
+            snap = self.retry.call(self.snapshots.latest, op="snapshot.load",
+                                   retry_on=(OSError,))
         if snap is None:
             raise RuntimeError(
                 "CoreReplica needs a published snapshot to bootstrap from; "
@@ -168,18 +185,27 @@ class CoreReplica(QueryAPI):
         tailer = WalTailer(self.wal_path, after_epoch=epoch0)
         applied_d = applied_i = batches = updates = 0
         last_epoch = epoch0
-        for e, dels, ins in tailer.poll():
-            batches += 1
-            updates += len(dels) + len(ins)
-            for u, v in dels:
-                applied_d += bool(bg.delete_edge(int(u), int(v)))
-            for u, v in ins:
-                applied_i += bool(bg.insert_edge(int(u), int(v)))
-            last_epoch = e
+        try:
+            for e, dels, ins in tailer.poll():
+                batches += 1
+                updates += len(dels) + len(ins)
+                for u, v in dels:
+                    applied_d += bool(bg.delete_edge(int(u), int(v)))
+                for u, v in ins:
+                    applied_i += bool(bg.insert_edge(int(u), int(v)))
+                last_epoch = e
+        except CorruptionError:
+            # a corrupt record past the snapshot: bring the replica up on
+            # the intact prefix instead of failing construction.  The
+            # cursor is pinned before the bad record, so the next sync()
+            # re-detects it and escalates (bootstrap / wait for the
+            # writer's rotation to repair the log).
+            pass
         settle = None
         if applied_d or applied_i:
             bg.flush()  # one CSR rewrite so the settle scans exact lists
-            eng = HostEngine(bg, self.block_edges, pool_blocks=self.pool_blocks)
+            eng = HostEngine(bg, self.block_edges, pool_blocks=self.pool_blocks,
+                             retry=self.retry)
             settle = warm_settle(eng, core0, applied_i, self._backend,
                                  superstep_chunk=self._superstep_chunk)
             state = (settle.core, settle.cnt)
@@ -188,6 +214,7 @@ class CoreReplica(QueryAPI):
         self.maintainer = CoreMaintainer(
             bg, self.block_edges, state=state, pool_blocks=self.pool_blocks,
             backend=self._backend, superstep_chunk=self._superstep_chunk,
+            retry=self.retry,
         )
         self.bg = self.maintainer.bg
         self.epoch = last_epoch
@@ -223,39 +250,131 @@ class CoreReplica(QueryAPI):
             f"{[v.epoch for v in self.views]})")
 
     # ----------------------------------------------------------------- sync
+    def _drain(self, max_batches: int | None) -> int:
+        """One tailing pass: apply newly durable records from the cursor.
+
+        Idempotent under retry: the cursor (byte offset + last epoch)
+        advances only past records that were fully applied, so re-calling
+        after a transient failure resumes exactly where the failure struck.
+        """
+        applied = 0
+        for e, dels, ins in self.tailer.poll():
+            self.maintainer.apply_batch(dels, ins, self.insert_algorithm)
+            self.epoch = e
+            self.batches_applied += 1
+            self._batches_ctr.inc()
+            applied += 1
+            self._publish()
+            if max_batches is not None and applied >= max_batches:
+                break
+        return applied
+
+    def _recover_by_bootstrap(self) -> int:
+        """Full snapshot catch-up after tailing broke (gap/corruption/trip).
+
+        On failure the replica *keeps serving* its last good epoch views
+        (``stale_serving`` flips on, the failure is counted) instead of
+        raising into the read path — staleness is visible through
+        ``health()``/``lag()``, availability is preserved.
+        """
+        try:
+            if self.retry is None:
+                self._bootstrap()
+            else:
+                self.retry.call(self._bootstrap, op="replica.bootstrap",
+                                retry_on=(OSError,))
+        except (OSError, CorruptionError, RuntimeError):
+            self.stale_serving = True
+            self.bootstrap_failures += 1
+            self._sync_failures_ctr.inc()
+            return 0
+        self.breaker.record_success()
+        self.stale_serving = False
+        return 1
+
     def sync(self, max_batches: int | None = None) -> int:
         """Drain newly durable WAL records into the epoch-view chain.
 
         Replays each batch through ``CoreMaintainer.apply_batch`` — the
         writer's own maintenance path, so the settled ``(core, cnt)`` is
         bit-identical to the writer's at the same epoch — and publishes one
-        ``EpochView`` per batch.  Falling behind a rotation re-bootstraps
-        from the latest snapshot (the restartable catch-up path).  Returns
-        the number of batches applied (bootstrap counts as one).
+        ``EpochView`` per batch.  Returns the number of batches applied
+        (bootstrap counts as one).
+
+        Failure policy (DESIGN.md §17): falling behind a rotation
+        (:class:`WalGap`) or hitting a checksum failure
+        (:class:`CorruptionError`) abandons incremental tailing for a full
+        snapshot bootstrap; transient I/O errors are retried by the
+        configured ``RetryPolicy`` and, when they persist, counted by the
+        circuit breaker — ``breaker_trip_after`` consecutive failed syncs
+        trip straight to bootstrap.  Every failure path degrades to serving
+        the last good epoch rather than raising into the read path.
         """
         t0 = time.perf_counter()
         applied = 0
         with _trace.span("replica.sync", cat="stream",
                          replica=self.replica_id) as sp:
             try:
-                for e, dels, ins in self.tailer.poll():
-                    self.maintainer.apply_batch(
-                        dels, ins, self.insert_algorithm)
-                    self.epoch = e
-                    self.batches_applied += 1
-                    self._batches_ctr.inc()
-                    applied += 1
-                    self._publish()
-                    if max_batches is not None and applied >= max_batches:
-                        break
-            except WalGap:
-                self._bootstrap()
-                applied += 1
+                if self.retry is None:
+                    applied = self._drain(max_batches)
+                else:
+                    applied = self.retry.call(
+                        self._drain, max_batches, op="replica.sync",
+                        retry_on=(OSError,))
+                self.breaker.record_success()
+                self.stale_serving = False
+                if applied == 0:
+                    # an empty drain with a newer snapshot published means
+                    # the log has nothing left for this cursor (a rotation
+                    # repaired records away, or emptied the log entirely):
+                    # the snapshot store is the only way forward.
+                    floor = self.snapshots.latest_epoch()
+                    if floor is not None and floor > self.epoch:
+                        applied += self._recover_by_bootstrap()
+            except (WalGap, CorruptionError):
+                # non-transient: the log no longer works for this cursor
+                self.sync_failures += 1
+                applied += self._recover_by_bootstrap()
+            except OSError:
+                # transient (possibly injected): serve stale, let the
+                # breaker decide when banging on the WAL stops being useful
+                self.sync_failures += 1
+                self._sync_failures_ctr.inc()
+                self.stale_serving = True
+                if self.breaker.record_failure():
+                    applied += self._recover_by_bootstrap()
             if sp.active:
-                sp.set(applied=applied, epoch=self.epoch)
+                sp.set(applied=applied, epoch=self.epoch,
+                       stale=self.stale_serving)
         self._sync_hist.observe(time.perf_counter() - t0)
         self.lag()
         return applied
+
+    # --------------------------------------------------------------- health
+    def health(self) -> dict:
+        """Replica liveness summary: {status, epoch, lag, breaker state}.
+
+        ``status`` is "ok" when tailing normally and "degraded" while the
+        replica serves stale views (failed sync/bootstrap or a tripped
+        breaker); a replica is never "overloaded" — it sheds nothing.
+        """
+        lag = self.lag()
+        degraded = self.stale_serving or self.breaker.tripped
+        return {
+            "status": "degraded" if degraded else "ok",
+            "replica_id": self.replica_id,
+            "epoch": int(self.epoch),
+            "lag": int(lag),
+            "stale_serving": self.stale_serving,
+            "breaker": {
+                "tripped": self.breaker.tripped,
+                "consecutive_failures": self.breaker.consecutive_failures,
+                "trips": self.breaker.trips,
+            },
+            "sync_failures": self.sync_failures,
+            "bootstrap_failures": self.bootstrap_failures,
+            "bootstraps": self.bootstraps,
+        }
 
     # ------------------------------------------------------------ staleness
     def lag(self, writer_epoch: int | None = None) -> int:
@@ -289,6 +408,9 @@ class CoreReplica(QueryAPI):
             "m": self.bg.m,
             "batches_applied": self.batches_applied,
             "bootstraps": self.bootstraps,
+            "sync_failures": self.sync_failures,
+            "bootstrap_failures": self.bootstrap_failures,
+            "stale_serving": self.stale_serving,
             "rotations_detected": self.tailer.rotations_detected,
             "wal_records_read": self.tailer.records_read,
             "retained_views": [v.epoch for v in self.views],

@@ -30,6 +30,7 @@ both roles in a single-process deployment).
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -43,11 +44,12 @@ from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from ..obs import metrics as _metrics, trace as _trace
 from .admission import AdmittedBatch, admit_batch
-from .wal import SnapshotStore, WriteAheadLog
+from .backpressure import AdmissionController, Overloaded
+from .wal import CorruptionError, SnapshotStore, WriteAheadLog
 
 __all__ = [
     "EpochView", "BatchStats", "RecoveryStats", "QueryAPI",
-    "CoreWriter", "CoreService",
+    "CoreWriter", "CoreService", "Overloaded",
     "Watermarked", "WatermarkedArray",
 ]
 
@@ -240,6 +242,11 @@ class BatchStats:
     num_changed: int
     flushes: int
     wall_time_s: float
+    # backpressure fields (stage-1 degradation, DESIGN.md §17): a deferred
+    # batch was WAL-logged (durable) but coalesced into the pending pool
+    # instead of applied; ``pending_updates`` is the pool size afterwards.
+    deferred: bool = False
+    pending_updates: int = 0
 
 
 @dataclass
@@ -413,22 +420,38 @@ class CoreWriter(QueryAPI):
         wal_fsync: bool = False,
         snapshot_dir: str | None = None,
         snapshot_every: int = 0,
+        snapshot_keep: int = 1,
         cache_size: int = 256,
         state: tuple[np.ndarray, np.ndarray] | None = None,
         epoch: int = 0,
         backend=None,
         superstep_chunk: int | None = None,
+        retry=None,
+        admission_budget: int = 0,
+        admission_soft_ratio: float = 0.5,
+        admission_max_defer: int = 4,
     ):
         self.maintainer = CoreMaintainer(
             graph, block_edges, state=state, pool_blocks=pool_blocks,
-            backend=backend, superstep_chunk=superstep_chunk,
+            backend=backend, superstep_chunk=superstep_chunk, retry=retry,
         )
         self.bg: BufferedGraph = self.maintainer.bg
         self.insert_algorithm = insert_algorithm
         self.epoch = int(epoch)
+        #: the last WAL-durable epoch.  Without backpressure it equals
+        #: ``epoch``; with an admission budget it can run ahead while
+        #: accepted-but-deferred batches sit in the pending pool.
+        self._wal_tip = int(epoch)
         self.wal = WriteAheadLog(wal_path, fsync=wal_fsync) if wal_path else None
-        self.snapshots = SnapshotStore(snapshot_dir) if snapshot_dir else None
+        self.snapshots = (
+            SnapshotStore(snapshot_dir, keep=snapshot_keep)
+            if snapshot_dir else None)
         self.snapshot_every = int(snapshot_every)
+        self.admission = (
+            AdmissionController(
+                admission_budget, soft_ratio=admission_soft_ratio,
+                max_defer=admission_max_defer)
+            if admission_budget > 0 else None)
         self._batches_since_snapshot = 0
         self.cache = _LRUCache(cache_size)
         self.batch_log: list[BatchStats] = []
@@ -451,13 +474,25 @@ class CoreWriter(QueryAPI):
 
     # --------------------------------------------------------------- writes
     def ingest(self, ops) -> BatchStats:
-        """Admit + log + apply one micro-batch; commit a new epoch view."""
+        """Admit + log + apply one micro-batch; commit a new epoch view.
+
+        With an ``admission_budget`` configured, ingest degrades under load
+        instead of queueing without bound: accepted batches are always
+        WAL-logged (durable on accept) but may be *deferred* — coalesced
+        into a bounded pending pool and applied as one settle later — and a
+        batch that cannot fit even after a full drain is rejected with a
+        typed :class:`Overloaded` (see backpressure.py for the state
+        machine).
+        """
+        if self.admission is not None:
+            return self._ingest_backpressure(ops)
         t0 = time.perf_counter()
         with _trace.span("service.ingest", cat="stream") as sp:
             admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
             next_epoch = self.epoch + 1
             if self.wal is not None:  # write-ahead: log before touching state
                 self.wal.append(next_epoch, admitted.deletes, admitted.inserts)
+            self._wal_tip = next_epoch
             flushes0 = self._flush_events
             m = self.maintainer.apply_batch(
                 admitted.deletes, admitted.inserts, self.insert_algorithm
@@ -495,23 +530,156 @@ class CoreWriter(QueryAPI):
             self.snapshot()
         return stats
 
+    def _ingest_backpressure(self, ops) -> BatchStats:
+        """Budgeted ingest: accept-durably, coalesce, defer, drain or shed.
+
+        Order of operations per offer: (1) a batch larger than the whole
+        budget can never fit and is shed immediately; (2) if the pool plus
+        the incoming batch overflows, the pool is drained first — after
+        which the batch fits by (1); (3) the accepted batch is WAL-appended
+        at ``_wal_tip + 1`` (durable even if deferred) and merged into the
+        pool; (4) the controller decides apply-now vs. defer (bounded by
+        ``max_defer`` consecutive deferrals).
+        """
+        adm = self.admission
+        t0 = time.perf_counter()
+        with _trace.span("service.ingest", cat="stream") as sp:
+            admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
+            incoming = admitted.num_admitted
+            if incoming > adm.budget:
+                raise adm.reject(incoming)
+            if not adm.fits(incoming):
+                self._apply_pending()  # stage-2 pressure: drain restores room
+            next_tip = self._wal_tip + 1
+            if self.wal is not None:  # durable on accept, even when deferred
+                self.wal.append(next_tip, admitted.deletes, admitted.inserts)
+            self._wal_tip = next_tip
+            adm.merge(admitted.deletes, admitted.inserts)
+            if adm.should_apply():
+                stats = self._apply_pending(admitted=admitted, t0=t0)
+            else:
+                adm.note_deferred()
+                stats = BatchStats(
+                    epoch=self.epoch,
+                    num_requested=admitted.num_requested,
+                    num_dropped=admitted.num_dropped,
+                    num_coalesced=admitted.num_coalesced,
+                    num_applied_deletes=0, num_applied_inserts=0,
+                    num_noops=0, node_computations=0, edge_block_reads=0,
+                    node_table_reads=0, iterations=0, num_changed=0,
+                    flushes=0, wall_time_s=time.perf_counter() - t0,
+                    deferred=True, pending_updates=adm.pending_updates,
+                )
+            if sp.active:
+                sp.set(epoch=self.epoch, wal_tip=self._wal_tip,
+                       requested=admitted.num_requested,
+                       deferred=stats.deferred,
+                       pending=adm.pending_updates)
+        _INGEST_SECONDS.observe(time.perf_counter() - t0)
+        _INGESTS.inc()
+        self.batch_log.append(stats)
+        self._batches_since_snapshot += 1
+        if (
+            self.snapshots is not None
+            and self.snapshot_every > 0
+            and self._batches_since_snapshot >= self.snapshot_every
+        ):
+            self.snapshot()
+        return stats
+
+    def _apply_pending(self, admitted: AdmittedBatch | None = None,
+                       t0: float | None = None) -> BatchStats:
+        """Drain the whole pending pool into one settle at ``_wal_tip``.
+
+        All-or-nothing by design: the published view must equal the state a
+        replica reaches by replaying WAL records 1..``_wal_tip`` one at a
+        time, which coalesced last-op-per-edge application guarantees (see
+        backpressure.py).  Safe to call with an empty pool (publishes the
+        current state at the tip epoch).
+        """
+        adm = self.admission
+        t0 = time.perf_counter() if t0 is None else t0
+        deletes, inserts = adm.take()
+        flushes0 = self._flush_events
+        ta = time.perf_counter()
+        m = self.maintainer.apply_batch(deletes, inserts, self.insert_algorithm)
+        adm.note_applied(len(deletes) + len(inserts),
+                         time.perf_counter() - ta)
+        self.epoch = self._wal_tip
+        self._publish()
+        stats = BatchStats(
+            epoch=self.epoch,
+            num_requested=admitted.num_requested if admitted else 0,
+            num_dropped=admitted.num_dropped if admitted else 0,
+            num_coalesced=admitted.num_coalesced if admitted else 0,
+            num_applied_deletes=m.num_deletes,
+            num_applied_inserts=m.num_inserts,
+            num_noops=m.num_noops,
+            node_computations=m.node_computations,
+            edge_block_reads=m.edge_block_reads,
+            node_table_reads=m.node_table_reads,
+            iterations=m.iterations,
+            num_changed=m.num_changed,
+            flushes=self._flush_events - flushes0,
+            wall_time_s=time.perf_counter() - t0,
+            pending_updates=0,
+        )
+        return stats
+
+    # --------------------------------------------------------------- health
+    def health(self) -> dict:
+        """Liveness/degradation summary: {status, epoch, wal lag, admission}.
+
+        ``status`` is "ok", "degraded" (deferred batches pending — readers
+        see a bounded-stale epoch) or "overloaded" (recent shedding with a
+        still-saturated pool).
+        """
+        status = "ok"
+        out = {
+            "epoch": int(self.epoch),
+            "wal_tip": int(self._wal_tip),
+            "wal_lag": int(self._wal_tip - self.epoch),
+            "wal_appends": self.wal.appends if self.wal else 0,
+        }
+        if self.admission is not None:
+            adm_state = self.admission.state()
+            out["admission"] = adm_state
+            if adm_state["stage"] == "overloaded" or (
+                    adm_state["stage"] == "degraded"
+                    and adm_state["pending_updates"] >= self.admission.budget):
+                status = "overloaded"
+            elif adm_state["stage"] == "degraded" or out["wal_lag"] > 0:
+                status = "degraded"
+        out["status"] = status
+        return out
+
     def snapshot(self) -> None:
         """Flush the update buffer and atomically dump the durable state.
 
         Snapshot publish also rotates the WAL: records at or below the
-        snapshot epoch are superseded (recovery and replica bootstrap both
-        start from the snapshot) and would otherwise grow the log without
-        bound.  Rotation is atomic (stream the tail to a temp file +
-        ``os.replace``) and ordered *after* the snapshot publish, so a crash
-        between the two leaves a WAL that is merely longer than necessary,
-        never one missing records the latest snapshot doesn't cover.
+        *rotation floor* are superseded and would otherwise grow the log
+        without bound.  The floor is the oldest **retained** snapshot's
+        epoch (``SnapshotStore.oldest_retained_epoch``): with the default
+        ``keep=1`` that is the snapshot just published (the historical
+        behavior), while ``keep >= 2`` keeps enough WAL tail to roll forward
+        from the older fallback snapshots, making recover-from-previous-
+        snapshot sound when the newest one turns out corrupt.  Rotation is
+        atomic (stream the tail to a temp file + rename + dir fsync) and
+        ordered *after* the snapshot publish, so a crash between the two
+        leaves a WAL that is merely longer than necessary, never one missing
+        records the latest snapshot doesn't cover.
         """
         if self.snapshots is None:
             raise RuntimeError("CoreService was built without a snapshot_dir")
+        if self.admission is not None and (
+                self.admission.pending or self.epoch != self._wal_tip):
+            # the snapshot must capture a state that equals a WAL prefix
+            self._apply_pending()
         g = self.bg.materialize()
         self.snapshots.save(self.epoch, g, self.maintainer.core, self.maintainer.cnt)
         if self.wal is not None:
-            self.wal.rotate(self.epoch)
+            floor = self.snapshots.oldest_retained_epoch()
+            self.wal.rotate(self.epoch if floor is None else floor)
         self._batches_since_snapshot = 0
 
     def close(self) -> None:
@@ -555,6 +723,7 @@ class CoreWriter(QueryAPI):
         base_graph: CSRGraph | None = None,
         block_edges: int = DEFAULT_BLOCK_EDGES,
         pool_blocks: int = 1,
+        snapshot_keep: int = 1,
         **service_kwargs,
     ) -> tuple["CoreService", RecoveryStats]:
         """Rebuild a service from snapshot + WAL tail, without full recompute.
@@ -565,8 +734,16 @@ class CoreWriter(QueryAPI):
         core by at most one and deletions never raise it — is a pointwise
         upper bound of the true decomposition, so SemiCore* passes from it
         (with ``cnt`` recomputed exactly once) settle to the exact fixpoint.
+
+        Corruption handling (DESIGN.md §17): a corrupt snapshot falls back
+        to an older retained one inside ``SnapshotStore.latest``; a framed
+        WAL record that fails its checksum ends the replay at that record —
+        the intact prefix is kept, the log is truncated at the corruption
+        offset (those batches are lost, exactly as if the crash had happened
+        before them), and the writer resumes from the last good epoch.
         """
-        snap = SnapshotStore(snapshot_dir).latest() if snapshot_dir else None
+        snap = (SnapshotStore(snapshot_dir, keep=snapshot_keep).latest()
+                if snapshot_dir else None)
         if snap is not None:
             epoch0, g, core0, cnt0 = snap
         elif base_graph is not None:
@@ -579,7 +756,19 @@ class CoreWriter(QueryAPI):
         applied_d = applied_i = batches = updates = 0
         last_epoch = epoch0
         if wal_path is not None:
-            for e, dels, ins in WriteAheadLog.replay(wal_path, after_epoch=epoch0):
+            replay = WriteAheadLog.replay(wal_path, after_epoch=epoch0)
+            while True:
+                try:
+                    e, dels, ins = next(replay)
+                except StopIteration:
+                    break
+                except CorruptionError as err:
+                    # keep the intact prefix; amputate the log at the bad
+                    # record so the reopened WAL appends after good data.
+                    if err.offset is not None and os.path.exists(wal_path):
+                        with open(wal_path, "rb+") as f:
+                            f.truncate(err.offset)
+                    break
                 batches += 1
                 updates += len(dels) + len(ins)
                 for u, v in dels:
@@ -595,7 +784,8 @@ class CoreWriter(QueryAPI):
             if applied_d or applied_i:
                 warm_restart = True
                 bg.flush()  # one CSR rewrite so the settle scans exact lists
-                eng = HostEngine(bg, block_edges, pool_blocks=pool_blocks)
+                eng = HostEngine(bg, block_edges, pool_blocks=pool_blocks,
+                                 retry=service_kwargs.get("retry"))
                 settle = warm_settle(
                     eng, core0, applied_i, service_kwargs.get("backend"),
                     superstep_chunk=service_kwargs.get("superstep_chunk"))
@@ -609,6 +799,7 @@ class CoreWriter(QueryAPI):
             pool_blocks=pool_blocks,
             wal_path=wal_path,
             snapshot_dir=snapshot_dir,
+            snapshot_keep=snapshot_keep,
             state=state,
             epoch=last_epoch,
             **service_kwargs,

@@ -1,0 +1,742 @@
+"""Fault-injection harness + durability matrix (DESIGN.md §17).
+
+Covers the seeded ``FaultPlan`` layer, CRC32C WAL/snapshot framing, the
+parametrized bit-flip corruption matrix (replay / tailer / tip_epoch /
+reopen / rotation-repair boundaries), retry + circuit-breaker recovery,
+dir-fsync power-loss regressions, admission backpressure, and the chaos
+soak: a writer plus two replicas under a randomized seeded fault schedule
+must end bit-identical to the in-memory oracle for every seed.
+"""
+import errno
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import imcore_bz
+from repro.faults import (CircuitBreaker, FaultInjected, FaultPlan, FaultRule,
+                          RetryPolicy, flip_bit, inject, simulate_power_loss)
+from repro.graph import chung_lu
+from repro.obs.metrics import counter
+from repro.stream import (CoreReplica, CoreWriter, CorruptionError,
+                          Overloaded, SnapshotStore, WalTailer, WriteAheadLog,
+                          crc32c, mixed_stream)
+from repro.stream.integrity import frame_record, is_framed, unframe
+
+
+def no_sleep(_seconds):
+    return None
+
+
+def fast_retry(retries=4, **kw):
+    kw.setdefault("base_delay", 0.0)
+    return RetryPolicy(retries, sleep=no_sleep, **kw)
+
+
+def batches(ops, size):
+    return [ops[i : i + size] for i in range(0, len(ops), size)]
+
+
+def framed_wal(path, n):
+    """A WAL of n framed records, epochs 1..n, one insert each."""
+    w = WriteAheadLog(path)
+    for e in range(1, n + 1):
+        w.append(e, [], [(0, e)])
+    w.close()
+
+
+def record_spans(path):
+    """[(byte offset, byte length)] of each line in the log."""
+    spans, off = [], 0
+    with open(path, "rb") as f:
+        for line in f:
+            spans.append((off, len(line)))
+            off += len(line)
+    return spans
+
+
+def flip_record(path, k):
+    """Flip one payload bit inside record k (0-based)."""
+    off, ln = record_spans(path)[k]
+    flip_bit(path, off + ln - 3)  # inside the JSON payload, not the newline
+    return off
+
+
+def make_writer(tmp_path, *, n=300, m=1200, seed=3, **kw):
+    g = chung_lu(n, m, seed=seed)
+    kw.setdefault("block_edges", 128)
+    w = CoreWriter(g, wal_path=str(tmp_path / "wal.log"),
+                   snapshot_dir=str(tmp_path / "snaps"), **kw)
+    return w, str(tmp_path / "wal.log"), str(tmp_path / "snaps")
+
+
+def assert_converged(rep, w):
+    assert rep.epoch == w.epoch
+    np.testing.assert_array_equal(rep.maintainer.core, w.maintainer.core)
+    np.testing.assert_array_equal(rep.maintainer.cnt, w.maintainer.cnt)
+
+
+# ============================================================== FaultPlan
+def test_chaos_plan_is_reproducible_from_its_seed():
+    rates = {"wal.append": {"io_error": 0.5, "latency": 0.3}}
+    ops = ["wal.append"] * 40 + ["wal.fsync"] * 10
+    logs = []
+    for _ in range(2):
+        plan = FaultPlan.chaos(7, rates)
+        for op in ops:
+            plan.decide(op)
+        logs.append(list(plan.log))
+    assert logs[0] == logs[1]
+    assert logs[0]  # the schedule actually fired at these rates
+    other = FaultPlan.chaos(8, rates)
+    for op in ops:
+        other.decide(op)
+    assert list(other.log) != logs[0]
+
+
+def test_scripted_rule_fires_at_exact_nth_op():
+    plan = FaultPlan([FaultRule("wal.append", "io_error", nth=3)])
+    fired = [plan.decide("wal.append") for _ in range(5)]
+    assert [d is not None for d in fired] == [False, False, True, False, False]
+    kind, _arg, count = fired[2]
+    assert (kind, count) == ("io_error", 3)
+    assert plan.injected[("wal.append", "io_error")] == 1
+
+
+def test_rule_patterns_fnmatch_and_every():
+    plan = FaultPlan([FaultRule("wal.*", "latency", every=2, arg=0.0)])
+    hits = [plan.decide("wal.append") is not None for _ in range(4)]
+    assert hits == [False, True, False, True]
+    assert plan.decide("snapshot.save") is None  # pattern does not match
+    assert plan.total_injected == 2
+
+
+def test_injected_faults_are_visible_in_the_metric(tmp_path):
+    fam = counter("repro_faults_injected_total")
+    before = fam.value
+    plan = FaultPlan([FaultRule("wal.append", "io_error", nth=1)])
+    w = WriteAheadLog(str(tmp_path / "wal.log"))
+    with inject(plan):
+        with pytest.raises(FaultInjected) as ei:
+            w.append(1, [], [(0, 1)])
+    w.close()
+    assert (ei.value.op, ei.value.kind, ei.value.index) == \
+        ("wal.append", "io_error", 1)
+    assert plan.total_injected == 1
+    assert fam.value - before == 1
+
+
+# ========================================================== CRC32C framing
+def test_crc32c_known_answer():
+    assert crc32c(b"123456789") == 0xE3069283
+    assert crc32c(b"") == 0
+
+
+def test_frame_roundtrip_and_flip_detection():
+    payload = b'{"epoch":7,"del":[],"ins":[[0,7]]}'
+    line = frame_record(payload)
+    assert is_framed(line)
+    assert unframe(line) == payload
+    # any single-bit payload flip fails the checksum
+    corrupt = bytearray(line)
+    corrupt[-3] ^= 0x10
+    with pytest.raises(CorruptionError):
+        unframe(bytes(corrupt))
+    # a short frame (torn write) fails the length check, not the CRC
+    with pytest.raises(CorruptionError) as ei:
+        unframe(line[:-8] + b"\n")
+    assert "torn" in str(ei.value)
+
+
+# ================================================ WAL corruption matrix
+N_RECORDS = 5
+
+
+@pytest.mark.parametrize("k", range(N_RECORDS))
+def test_bitflip_matrix_replay(tmp_path, k):
+    """Interior corruption raises a typed error with its offset; a corrupt
+    final record is indistinguishable from a torn tail and is skipped."""
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, N_RECORDS)
+    off = flip_record(wal, k)
+    if k == N_RECORDS - 1:
+        got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+        assert got == list(range(1, N_RECORDS))
+    else:
+        with pytest.raises(CorruptionError) as ei:
+            list(WriteAheadLog.replay(wal))
+        assert ei.value.path == wal
+        assert ei.value.offset == off
+
+
+@pytest.mark.parametrize("k", range(N_RECORDS))
+def test_bitflip_matrix_tip_epoch(tmp_path, k):
+    """The O(record) tail probe never reads interior records: only tail
+    corruption is visible to it, and it steps over at most one record."""
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, N_RECORDS)
+    flip_record(wal, k)
+    if k == N_RECORDS - 1:  # steps over exactly one unacknowledged tail
+        assert WriteAheadLog.tip_epoch(wal) == N_RECORDS - 1
+    else:  # interior flips are the replay/tailer layers' job to catch
+        assert WriteAheadLog.tip_epoch(wal) == N_RECORDS
+
+
+def test_tip_epoch_raises_on_two_corrupt_tail_records(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, N_RECORDS)
+    flip_record(wal, N_RECORDS - 1)
+    flip_record(wal, N_RECORDS - 2)
+    with pytest.raises(CorruptionError):
+        WriteAheadLog.tip_epoch(wal)
+
+
+@pytest.mark.parametrize("k", [1, 2, N_RECORDS - 1])
+def test_bitflip_matrix_tailer(tmp_path, k):
+    """The tailer delivers the intact prefix, then raises without advancing
+    its cursor past the corrupt record — every poll re-detects it."""
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, N_RECORDS)
+    off = flip_record(wal, k)
+    t = WalTailer(wal)
+    got = []
+    with pytest.raises(CorruptionError):
+        for rec in t.poll():
+            got.append(rec[0])
+    assert got == list(range(1, k + 1))
+    assert t.offset == off
+    with pytest.raises(CorruptionError):  # cursor did not advance
+        list(t.poll())
+    assert t.offset == off
+
+
+def test_corrupt_final_record_truncated_on_reopen(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, N_RECORDS)
+    flip_record(wal, N_RECORDS - 1)
+    w = WriteAheadLog(wal)  # reopen drops the unacknowledged corrupt tail
+    w.append(N_RECORDS, [], [(1, 2)])
+    w.close()
+    got = [(e, ins) for e, _, ins in WriteAheadLog.replay(wal)]
+    assert [e for e, _ in got] == list(range(1, N_RECORDS + 1))
+    assert got[-1][1] == [(1, 2)]
+
+
+def test_rotation_repairs_interior_corruption(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    fam = counter("repro_wal_repaired_records_total")
+    before = fam.value
+    framed_wal(wal, N_RECORDS)
+    flip_record(wal, 2)
+    w = WriteAheadLog(wal)
+    w.rotate(0)  # nothing superseded: only the corrupt record is dropped
+    w.close()
+    assert w.repaired == 1
+    assert fam.value - before == 1
+    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    assert got == [1, 2, 4, 5]  # epoch 3 was unrecoverable
+
+
+def test_legacy_unframed_wal_still_replays(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    with open(wal, "w") as f:
+        f.write('{"epoch": 1, "del": [], "ins": [[0, 1]]}\n')
+        f.write('{"epoch": 2, "del": [[0, 1]], "ins": []}\n')
+    w = WriteAheadLog(wal)  # appends framed records after legacy ones
+    w.append(3, [], [(2, 3)])
+    w.close()
+    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    assert got == [1, 2, 3]
+    # the tailer types legacy corruption too (wrapped, cursor pinned)
+    with open(wal, "r+") as f:
+        f.seek(0)
+        f.write('{"epoch" garbage')
+    t = WalTailer(wal)
+    with pytest.raises(CorruptionError):
+        list(t.poll())
+    assert t.offset == 0
+
+
+def test_rotation_reframes_legacy_records(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    with open(wal, "w") as f:
+        f.write('{"epoch": 1, "del": [], "ins": [[0, 1]]}\n')
+        f.write('{"epoch": 2, "del": [], "ins": [[2, 3]]}\n')
+    w = WriteAheadLog(wal)
+    w.rotate(1)
+    w.close()
+    with open(wal, "rb") as f:
+        lines = f.readlines()
+    assert len(lines) == 1 and is_framed(lines[0])
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [2]
+
+
+def test_torn_append_self_heals_for_retry(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    w = WriteAheadLog(wal)
+    w.append(1, [], [(0, 1)])
+    plan = FaultPlan([FaultRule("wal.append", "torn_write", nth=1, arg=0.5)])
+    with inject(plan):
+        with pytest.raises(FaultInjected):
+            w.append(2, [], [(2, 3)])
+        w.append(2, [], [(2, 3)])  # retry lands on a clean offset
+    w.close()
+    assert plan.total_injected == 1
+    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    assert got == [1, 2]  # no torn fragment, no duplicate
+
+
+# =========================================================== snapshots
+def _dummy_store(tmp_path, *, keep, epochs):
+    g = chung_lu(60, 200, seed=1)
+    store = SnapshotStore(str(tmp_path / "snaps"), keep=keep)
+    core = imcore_bz(g)
+    cnt = np.ones(g.n, dtype=np.int64)
+    for e in epochs:
+        store.save(e, g, core + e, cnt)
+    return store, g
+
+
+def test_snapshot_flip_falls_back_to_older(tmp_path):
+    fam = counter("repro_snapshot_fallbacks_total")
+    before = fam.value
+    store, _g = _dummy_store(tmp_path, keep=2, epochs=[1, 2])
+    flip_bit(os.path.join(store._dir(2), "core.npy"), -9)
+    epoch, _graph, core, _cnt = store.latest()
+    assert epoch == 1
+    assert store.fallbacks == 1
+    assert fam.value - before == 1
+    assert core[0] == imcore_bz(chung_lu(60, 200, seed=1))[0] + 1
+
+
+def test_snapshot_all_corrupt_raises_typed(tmp_path):
+    store, _g = _dummy_store(tmp_path, keep=1, epochs=[1])
+    flip_bit(os.path.join(store._dir(1), store.MANIFEST), 8)
+    with pytest.raises(CorruptionError) as ei:
+        store.latest()
+    assert ei.value.layer == "snapshot"
+
+
+def test_snapshot_manifest_tamper_detected(tmp_path):
+    """Editing the manifest itself (consistent JSON, wrong self-CRC) fails."""
+    store, _g = _dummy_store(tmp_path, keep=1, epochs=[3])
+    mpath = os.path.join(store._dir(3), store.MANIFEST)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["epoch"] = 4  # body no longer matches the embedded checksum
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, sort_keys=True, separators=(",", ":"))
+    with pytest.raises(CorruptionError, match="manifest checksum"):
+        store.verify(store._dir(3))
+
+
+def test_legacy_snapshot_without_manifest_loads(tmp_path):
+    store, _g = _dummy_store(tmp_path, keep=1, epochs=[5])
+    os.remove(os.path.join(store._dir(5), store.MANIFEST))
+    epoch, _graph, _core, _cnt = store.latest()
+    assert epoch == 5
+
+
+def test_keep_n_retention_and_rotation_floor(tmp_path):
+    store, _g = _dummy_store(tmp_path, keep=2, epochs=[1, 2, 3])
+    assert store.latest_epoch() == 3
+    assert store.oldest_retained_epoch() == 2  # epoch 1 was GC'd
+    assert len(store._names()) == 2
+
+
+def test_enospc_on_snapshot_save_leaves_store_usable(tmp_path):
+    w, _wal, _snaps = make_writer(tmp_path, snapshot_keep=2)
+    w.snapshot()
+    plan = FaultPlan([FaultRule("snapshot.save", "enospc", nth=1)])
+    with inject(plan):
+        with pytest.raises(FaultInjected) as ei:
+            w.snapshot()
+    assert ei.value.errno == errno.ENOSPC
+    assert w.snapshots.latest()[0] == 0  # previous snapshot intact
+    w.ingest([("+", 0, 1)])
+    w.snapshot()  # clean retry succeeds
+    assert w.snapshots.latest_epoch() == 1
+
+
+# ============================================ power loss / dir fsync
+def test_snapshot_publish_needs_the_directory_fsync(tmp_path):
+    """Satellite regression: with the parent-dir fsync swallowed (lying
+    fsync), a power loss un-publishes the snapshot rename; with it honored
+    the publish survives."""
+    lying = FaultPlan([FaultRule("snapshot.dirsync", "lying_fsync", every=1)],
+                      track_durability=True)
+    with inject(lying):
+        store, _g = _dummy_store(tmp_path, keep=1, epochs=[1])
+        simulate_power_loss()
+        assert store.latest() is None  # the publish rename was lost
+    honest = FaultPlan(track_durability=True)
+    with inject(honest):
+        g = chung_lu(60, 200, seed=1)
+        store.save(2, g, np.zeros(g.n, np.int64), np.zeros(g.n, np.int64))
+        simulate_power_loss()
+        assert store.latest()[0] == 2
+
+
+def test_wal_rotation_needs_the_directory_fsync(tmp_path):
+    wal = str(tmp_path / "wal.log")
+    framed_wal(wal, 4)
+    pre = (tmp_path / "wal.log").read_bytes()
+    lying = FaultPlan([FaultRule("wal.dirsync", "lying_fsync", every=1)],
+                      track_durability=True)
+    with inject(lying):
+        w = WriteAheadLog(wal, fsync=True)
+        w.rotate(2)
+        w.close()
+        simulate_power_loss()
+    # rename not durable: power loss rolls back to the unrotated log
+    assert (tmp_path / "wal.log").read_bytes() == pre
+    honest = FaultPlan(track_durability=True)
+    with inject(honest):
+        w = WriteAheadLog(wal, fsync=True)
+        w.rotate(2)
+        w.close()
+        simulate_power_loss()
+    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    assert got == [3, 4]  # the rotation survived the crash
+
+
+# ======================================================= retry / breaker
+def test_retry_delays_deterministic_and_bounded():
+    mk = lambda: RetryPolicy(4, base_delay=0.01, max_delay=0.05, jitter=0.5,
+                             seed=9, sleep=no_sleep)
+    a, b = list(mk().delays()), list(mk().delays())
+    assert a == b and len(a) == 4
+    assert all(0 < d <= 0.05 for d in a)
+    nojit = RetryPolicy(3, base_delay=0.01, max_delay=1.0, jitter=0.0,
+                        sleep=no_sleep)
+    assert list(nojit.delays()) == [0.01, 0.02, 0.04]
+
+
+def test_retry_deadline_stops_early():
+    p = RetryPolicy(10, base_delay=0.5, jitter=0.0, deadline=1.0,
+                    sleep=no_sleep)
+    assert len(list(p.delays())) < 10
+
+
+def test_retry_call_recovers_then_exhausts():
+    retried = counter("repro_retries_total")
+    exhausted = counter("repro_retries_exhausted_total")
+    r0, e0 = retried.value, exhausted.value
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert fast_retry(4).call(flaky, op="unit") == "ok"
+    assert calls["n"] == 3
+    assert retried.value - r0 == 2
+
+    def always():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError):
+        fast_retry(2).call(always, op="unit")
+    assert exhausted.value - e0 == 1
+
+
+def test_retry_only_catches_listed_exceptions():
+    def bad():
+        raise ValueError("not retryable")
+
+    with pytest.raises(ValueError):
+        fast_retry(3).call(bad, op="unit", retry_on=(OSError,))
+
+
+def test_circuit_breaker_trips_once_then_resets():
+    b = CircuitBreaker(trip_after=3)
+    assert [b.record_failure() for _ in range(4)] == \
+        [False, False, True, False]
+    assert b.tripped and b.trips == 1
+    b.record_success()
+    assert not b.tripped and b.consecutive_failures == 0
+
+
+# ====================================== BlockReader faults (satellite 2)
+def test_block_read_fault_then_retry_keeps_accounting_exact(tmp_path):
+    from repro.core.semicore import HostEngine
+
+    g = chung_lu(400, 1600, seed=2)
+    clean = HostEngine(g, block_edges=32, pool_blocks=8)
+    res_clean = clean.semicore_star("seq")
+
+    plan = FaultPlan([FaultRule("block.read", "io_error", every=13)])
+    eng = HostEngine(g, block_edges=32, pool_blocks=8, retry=fast_retry(6))
+    with inject(plan):
+        res = eng.semicore_star("seq")
+    assert plan.total_injected > 0
+    np.testing.assert_array_equal(res.core, res_clean.core)
+    # a failed fill is never charged: the retried run's misses equal the
+    # clean run's exactly; re-touching the span's already-filled prefix on
+    # retry books as extra pool hits, never as reads
+    a, b = clean.reader, eng.reader
+    assert b.reads == a.reads
+    assert b.hits >= a.hits
+    assert len(b._pool) == len(a._pool)
+
+
+def test_block_read_without_retry_propagates(tmp_path):
+    from repro.core.semicore import HostEngine
+
+    g = chung_lu(100, 400, seed=2)
+    eng = HostEngine(g, block_edges=32, pool_blocks=4)
+    with inject(FaultPlan([FaultRule("block.read", "io_error", nth=1)])):
+        with pytest.raises(FaultInjected):
+            eng.semicore_star("seq")
+
+
+# ===================================================== writer recovery
+def test_writer_recover_truncates_at_interior_corruption(tmp_path):
+    from repro.stream import CoreService
+
+    w, wal, snaps = make_writer(tmp_path)
+    w.snapshot()
+    ops, _ = mixed_stream(w.bg.materialize(), 60, seed=4)
+    all_batches = batches(ops, 10)
+    for b in all_batches:
+        w.ingest(b)
+    w.wal.close()
+    flip_record(wal, 3)  # epoch 4 of 6 becomes unreadable
+
+    w2, _rs = CoreService.recover(wal_path=wal, snapshot_dir=snaps,
+                                  block_edges=128)
+    assert w2.epoch == 3  # the intact prefix, nothing past the corruption
+    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2, 3]
+
+    expect, _, _ = make_writer(tmp_path / "expect")
+    for b in all_batches[:3]:
+        expect.ingest(b)
+    np.testing.assert_array_equal(w2.maintainer.core, expect.maintainer.core)
+    np.testing.assert_array_equal(w2.maintainer.cnt, expect.maintainer.cnt)
+    np.testing.assert_array_equal(
+        w2.maintainer.core, imcore_bz(w2.bg.materialize()))
+
+
+# ==================================================== replica recovery
+def test_replica_corruption_bootstraps_then_rotation_unwedges(tmp_path):
+    w, wal, snaps = make_writer(tmp_path)
+    ops, _ = mixed_stream(w.bg.materialize(), 60, seed=5)
+    bs = batches(ops, 10)
+    for b in bs[:3]:
+        w.ingest(b)
+    w.snapshot()  # snapshot at epoch 3
+    for b in bs[3:]:
+        w.ingest(b)  # epochs 4..6
+    # the snapshot's rotation left records 4..6: flip epoch 5 (interior)
+    flip_record(wal, 1)
+
+    rep = CoreReplica(snapshot_dir=snaps, wal_path=wal, block_edges=128)
+    assert rep.epoch == 4  # bootstrap stops at the intact prefix
+    rep.sync()  # re-detects the corruption, falls back to a bootstrap
+    assert rep.sync_failures >= 1
+    assert rep.bootstraps >= 2
+    assert rep.epoch == 4  # pinned before the bad record until repaired
+
+    w.snapshot()  # snapshot at 6 + rotation: the corrupt record is repaired
+    assert w.wal.repaired == 1
+    rep.sync()
+    assert_converged(rep, w)
+    assert rep.health()["status"] == "ok"
+
+
+def test_replica_breaker_trips_transient_polls_to_bootstrap(tmp_path):
+    w, wal, snaps = make_writer(tmp_path)
+    ops, _ = mixed_stream(w.bg.materialize(), 40, seed=6)
+    for b in batches(ops, 10):
+        w.ingest(b)
+    w.snapshot()
+    rep = CoreReplica(snapshot_dir=snaps, wal_path=wal, block_edges=128,
+                      breaker_trip_after=2)
+    for b in batches(mixed_stream(w.bg.materialize(), 20, seed=7)[0], 10):
+        w.ingest(b)
+
+    with inject(FaultPlan([FaultRule("wal.poll", "io_error", every=1)])):
+        rep.sync()  # transient failure 1: serve stale, count it
+        assert rep.stale_serving and not rep.breaker.tripped
+        assert rep.health()["status"] == "degraded"
+        rep.sync()  # failure 2 trips the breaker -> bootstrap attempt
+        assert rep.breaker.tripped
+        # the bootstrap's own catch-up poll hits the same outage: counted,
+        # and the replica keeps serving its last good views
+        assert rep.bootstrap_failures >= 1
+        assert rep.stale_serving
+    assert rep.sync_failures == 2
+    rep.sync()  # outage over: the pinned cursor drains to the tip
+    assert not rep.stale_serving
+    assert rep.breaker.consecutive_failures == 0
+    assert_converged(rep, w)
+    assert rep.health()["status"] == "ok"
+
+
+def test_replica_survives_total_outage_and_stays_stale(tmp_path):
+    w, wal, snaps = make_writer(tmp_path)
+    w.snapshot()
+    w.ingest([("+", 0, 1)])
+    rep = CoreReplica(snapshot_dir=snaps, wal_path=wal, block_edges=128,
+                      breaker_trip_after=1)
+    before = rep.epoch
+    plan = FaultPlan([FaultRule("wal.poll", "io_error", every=1),
+                      FaultRule("snapshot.load", "io_error", every=1)])
+    with inject(plan):
+        rep.sync()  # poll fails, breaker trips, bootstrap fails too
+        assert rep.stale_serving
+        assert rep.bootstrap_failures >= 1
+        assert rep.epoch == before  # still serving the last good views
+        assert rep.health()["status"] == "degraded"
+    rep.sync()
+    assert_converged(rep, w)
+
+
+# ======================================================== backpressure
+def test_admission_defers_then_bounded_staleness_applies(tmp_path):
+    w, _wal, _snaps = make_writer(
+        tmp_path, admission_budget=64, admission_soft_ratio=0.15,
+        admission_max_defer=3)
+    ops, _ = mixed_stream(w.bg.materialize(), 96, seed=8)
+    stats = [w.ingest(b) for b in batches(ops, 12)]
+    flags = [int(s.deferred) for s in stats]
+    assert flags == [1, 1, 1, 0, 1, 1, 1, 0]  # max_defer bounds staleness
+    soft = w.admission.soft
+    for s in stats:  # deferred batches hold a pool above the soft budget;
+        if s.deferred:  # every apply drains it to zero (all-or-nothing)
+            assert s.pending_updates > soft
+        else:
+            assert s.pending_updates == 0
+    # while deferring, health declares the bounded-stale window
+    w2, _, _ = make_writer(tmp_path / "mid", admission_budget=64,
+                           admission_soft_ratio=0.15, admission_max_defer=3)
+    s = w2.ingest(batches(ops, 12)[0])
+    assert s.deferred
+    h_mid = w2.health()
+    assert h_mid["status"] == "degraded" and h_mid["wal_lag"] > 0
+    # drain on snapshot: epoch catches the WAL tip exactly
+    w2.snapshot()
+    assert w2.epoch == w2._wal_tip
+    assert w2.health()["status"] == "ok"
+
+
+def test_overload_sheds_with_typed_retry_after(tmp_path):
+    w, _wal, _snaps = make_writer(tmp_path, admission_budget=20)
+    epoch0 = w.epoch
+    present = {tuple(e) for e in w.bg.materialize().edge_list().tolist()}
+    absent = [(u, v) for u in range(300) for v in range(u + 1, 300)
+              if (u, v) not in present][:40]
+    big = [("+", u, v) for u, v in absent]
+    with pytest.raises(Overloaded) as ei:
+        w.ingest(big)
+    exc = ei.value
+    assert exc.requested == 40 and exc.budget == 20
+    assert exc.retry_after_s > 0
+    assert w.epoch == epoch0  # shed batches leave no trace in the state
+    assert w.admission.rejected_batches == 1
+    assert w.admission.rejected_updates == 40
+    small = [("+", u, v) for u, v in absent[:2]]
+    w.ingest(small)  # within budget: accepted immediately after the shed
+    assert w.epoch == epoch0 + 1
+
+
+def test_backpressure_path_matches_sequential_and_oracle(tmp_path):
+    ops, _ = mixed_stream(chung_lu(300, 1200, seed=3), 120, seed=9)
+    w, _, _ = make_writer(tmp_path / "bp", admission_budget=48,
+                          admission_soft_ratio=0.2, admission_max_defer=2)
+    seq, _, _ = make_writer(tmp_path / "seq")
+    for b in batches(ops, 12):
+        w.ingest(b)
+        seq.ingest(b)
+    w.snapshot()  # drain any deferred tail
+    assert w.epoch == w._wal_tip == seq.epoch
+    np.testing.assert_array_equal(w.maintainer.core, seq.maintainer.core)
+    np.testing.assert_array_equal(w.maintainer.cnt, seq.maintainer.cnt)
+    np.testing.assert_array_equal(
+        w.maintainer.core, imcore_bz(w.bg.materialize()))
+
+
+# ========================================================= chaos soak
+CHAOS_SEEDS = (11, 23, 37, 41, 59, 67, 73, 89)
+
+CHAOS_RATES = {
+    "wal.append": {"io_error": 0.04, "torn_write": 0.03, "bit_flip": 0.02,
+                   "latency": 0.04},
+    "wal.fsync": {"lying_fsync": 0.2},
+    "wal.poll": {"io_error": 0.08},
+    "block.read": {"io_error": 0.01},
+    "snapshot.save": {"enospc": 0.15},
+    "snapshot.load": {"io_error": 0.1},
+}
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_soak_stays_bit_identical_to_oracle(tmp_path, seed):
+    """Writer + two replicas under a seeded randomized fault schedule: after
+    the storm, every node's (core, cnt) is bit-identical to the in-memory
+    oracle and both replicas converge to the writer."""
+    fam = counter("repro_faults_injected_total")
+    metric_before = fam.value
+    g = chung_lu(240, 960, seed=seed)
+    ops, _ = mixed_stream(g, 80, seed=seed)
+    wal = str(tmp_path / "wal.log")
+    snaps = str(tmp_path / "snaps")
+    plan = FaultPlan.chaos(seed, CHAOS_RATES)
+
+    w = CoreWriter(g, block_edges=128, wal_path=wal, wal_fsync=True,
+                   snapshot_dir=snaps, snapshot_keep=2,
+                   retry=fast_retry(6, seed=seed))
+
+    def try_snapshot():
+        for _ in range(20):
+            try:
+                w.snapshot()
+                return
+            except OSError:
+                continue
+        pytest.fail("snapshot never succeeded under injected ENOSPC")
+
+    with inject(plan):
+        try_snapshot()
+        reps = [
+            CoreReplica(snapshot_dir=snaps, wal_path=wal, block_edges=128,
+                        replica_id=i, retry=fast_retry(4, seed=seed + i),
+                        breaker_trip_after=2)
+            for i in (1, 2)
+        ]
+        for i, b in enumerate(batches(ops, 10)):
+            for _ in range(50):
+                try:
+                    w.ingest(b)
+                    break
+                except OSError:
+                    continue
+            else:
+                pytest.fail("ingest never succeeded under injected faults")
+            if (i + 1) % 3 == 0:
+                try:
+                    w.snapshot()
+                except OSError:
+                    pass
+            for r in reps:
+                r.sync()
+        try_snapshot()  # final snapshot; rotation repairs corrupt records
+
+    # the storm is over: replicas drain to the writer's tip and match it
+    for r in reps:
+        for _ in range(30):
+            if r.epoch == w.epoch:
+                break
+            r.sync()
+        assert_converged(r, w)
+    np.testing.assert_array_equal(
+        w.maintainer.core, imcore_bz(w.bg.materialize()))
+
+    # every injected fault is tallied and visible in the metric
+    assert plan.total_injected > 0
+    assert sum(plan.injected.values()) == plan.total_injected
+    assert len(plan.log) == plan.total_injected
+    assert fam.value - metric_before == plan.total_injected
