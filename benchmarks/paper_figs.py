@@ -16,6 +16,7 @@ from repro.core.imcore import imcore_peel
 from repro.core.emcore import emcore
 from repro.core.semicore import HostEngine, decompose
 from repro.core.maintenance import CoreMaintainer
+from repro.core.update import Delete, Insert, UpdateBatch
 
 BLOCK = 4096
 
@@ -94,7 +95,7 @@ def bench_maintenance(dataset="lj-sim", num_edges=100, seed=7):
     t0 = time.perf_counter()
     io = comp = 0
     for u, v in picks:
-        s = m.delete_edge(int(u), int(v))
+        s = m.apply(UpdateBatch((Delete(int(u), int(v)),)))
         io += s.edge_block_reads
         comp += s.node_computations
     out["delete_star_avg_s"] = (time.perf_counter() - t0) / num_edges
@@ -108,7 +109,8 @@ def bench_maintenance(dataset="lj-sim", num_edges=100, seed=7):
         t0 = time.perf_counter()
         io = comp = 0
         for u, v in picks:
-            s = m2.insert_edge(int(u), int(v), algorithm=algo)
+            s = m2.apply(UpdateBatch((Insert(int(u), int(v)),)),
+                         insert_algorithm=algo)
             io += s.edge_block_reads
             comp += s.node_computations
         key = algo.replace("*", "_star")
@@ -140,9 +142,11 @@ def bench_scalability(dataset="twitter-sim", fracs=(0.2, 0.4, 0.6, 0.8, 1.0)):
             e = sub.edge_list()
             if len(e):
                 u, v = e[len(e) // 2]
-                _, t = _time(lambda: m.delete_edge(int(u), int(v)))
+                _, t = _time(lambda: m.apply(
+                    UpdateBatch((Delete(int(u), int(v)),))))
                 rec["delete_s"] = t
-                _, t = _time(lambda: m.insert_edge(int(u), int(v)))
+                _, t = _time(lambda: m.apply(
+                    UpdateBatch((Insert(int(u), int(v)),))))
                 rec["insert_star_s"] = t
             rows.append(rec)
     return rows

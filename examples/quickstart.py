@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.graph import paper_example_graph, chung_lu
 from repro.core import decompose, imcore_bz, CoreMaintainer
+from repro.core.update import Delete, Insert, UpdateBatch
 
 # --- the paper's Fig. 1 graph -----------------------------------------------
 g = paper_example_graph()
@@ -29,10 +30,18 @@ print(f"\nchung_lu(50k, 400k): kmax={r.kmax} iters={r.iterations} "
 # --- maintain under updates ---------------------------------------------------
 m = CoreMaintainer(g)
 e = g.edge_list()[12345]
-s = m.delete_edge(int(e[0]), int(e[1]))
+s = m.apply(UpdateBatch((Delete(int(e[0]), int(e[1])),)))
 print(f"delete edge: {s.node_computations} computations, "
       f"{s.edge_block_reads} I/Os, {s.num_changed} cores changed")
-s = m.insert_edge(int(e[0]), int(e[1]))
+s = m.apply(UpdateBatch((Insert(int(e[0]), int(e[1])),)))
 print(f"insert edge: {s.node_computations} computations, "
       f"{s.edge_block_reads} I/Os, {s.num_changed} cores changed")
 print("cores back to original:", np.array_equal(m.core, ref))
+
+# a whole micro-batch settles in one call — deletes and inserts interleave
+# in submission order, and stats report the independent groups settled
+picks = g.edge_list()[:4]
+batch = UpdateBatch.from_pairs(deletes=picks[:2], inserts=picks[:2])
+s = m.apply(batch)
+print(f"batch of {len(batch)} ops: algorithm={s.algorithm} "
+      f"groups={s.groups} noops={s.num_noops}")

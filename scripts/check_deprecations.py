@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Lint: no internal caller may use a deprecated update-API spelling.
+
+PR 10 fronts all maintenance behind ``CoreMaintainer.apply(UpdateBatch)``
+and typed WAL op records; the historical pair-of-lists spellings survive
+only as deprecated shims for external callers.  This lint keeps the repo
+itself honest: ``src/``, ``benchmarks/``, ``examples/`` and ``scripts/``
+must not call a shim (the shim definitions themselves, and tests that
+explicitly cover shim equivalence, are exempt).
+
+    PYTHONPATH=src python scripts/check_deprecations.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: directories whose python files must be shim-free
+LINTED_DIRS = ("src", "benchmarks", "examples", "scripts")
+
+#: deprecated spelling -> (regex, allowed files).  Allowed files are the
+#: definition/shim sites; everything else is a violation.
+RULES = [
+    (
+        "CoreMaintainer.apply_batch(deletes, inserts)",
+        re.compile(r"\.apply_batch\s*\("),
+        {
+            os.path.join("src", "repro", "core", "maintenance.py"),
+        },
+    ),
+    (
+        "CoreMaintainer.insert_edge/delete_edge(u, v)",
+        # `(?<!g)` exempts BufferedGraph receivers (bg./self.bg./g.): the
+        # structural graph mutators share these names and are not deprecated
+        re.compile(r"(?<!g)\.(?:insert_edge|delete_edge)\s*\("),
+        {
+            os.path.join("src", "repro", "core", "maintenance.py"),
+        },
+    ),
+    (
+        "WriteAheadLog.append(epoch, deletes, inserts) [3-arg pair form]",
+        # an append whose top-level comma count implies 3+ args
+        re.compile(r"\bwal\.append\s*\(([^()]*,){2,}[^()]*\)|"
+                   r"\.append\s*\(\s*[^,()]+,\s*\[[^\]]*\]\s*,"),
+        {
+            os.path.join("src", "repro", "stream", "wal.py"),
+        },
+    ),
+]
+
+
+def lint() -> int:
+    failures = []
+    for d in LINTED_DIRS:
+        root = os.path.join(REPO, d)
+        if not os.path.isdir(root):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(root):
+            for fn in filenames:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, REPO)
+                with open(path, encoding="utf-8") as f:
+                    lines = f.readlines()
+                for name, rx, allowed in RULES:
+                    if rel in allowed or rel == os.path.join(
+                            "scripts", "check_deprecations.py"):
+                        continue
+                    for i, line in enumerate(lines, 1):
+                        code = line.split("#", 1)[0]
+                        if rx.search(code):
+                            failures.append(f"{rel}:{i}: deprecated {name}")
+    if failures:
+        print("deprecated update-API spellings found:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("check_deprecations OK: no internal caller uses a deprecated "
+          "update-API spelling")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(lint())

@@ -48,6 +48,20 @@ REPRO_PALLAS_FUSED=0 REPRO_BACKEND=pallas \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python benchmarks/bench_backends.py --check-trajectory
 
+# maintenance-scaling trajectory gate (DESIGN.md §18): sustained updates/s
+# of the parallel grouped settle vs the serial oracle across batch sizes on
+# the fixed 10k/60k cell.  Same-machine ratio, so machine-speed independent;
+# fails if the batch=64 speedup drops below 2x.  Also re-asserts the
+# differential contract (parallel state bit-identical to serial) inside the
+# bench itself.  Rows merge into results/stream.json under "maint_scaling".
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_stream.py --quick --maint-scaling
+
+# update-API deprecation lint (DESIGN.md §18): no internal caller may use a
+# deprecated spelling (apply_batch, 3-arg wal.append) — shims exist for
+# external callers only.
+python scripts/check_deprecations.py
+
 # telemetry leg (DESIGN.md §14): run the large bench cell with tracing on,
 # emitting a Perfetto-loadable Chrome trace (superstep_trace.json), the full
 # registry in Prometheus text exposition (metrics.prom) and a markdown
@@ -78,6 +92,28 @@ if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/bench_stream.py --quick
+
+# parallel-maint oracle smoke (DESIGN.md §18): the same mixed streaming
+# workload forced onto the serial parity oracle — REPRO_PARALLEL_MAINT=0
+# must stay a working end-to-end configuration, since it is how the
+# differential battery pins bit-identity.
+REPRO_PARALLEL_MAINT=0 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python benchmarks/bench_stream.py --quick
+
+# updates/s cell into the workflow step summary
+if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - >> "$GITHUB_STEP_SUMMARY" <<'PYEOF'
+import json
+cell = json.load(open("benchmarks/results/stream.json"))["maint_scaling"]
+print("\n### Maintenance scaling (parallel grouped settle vs serial oracle)\n")
+print("| batch | parallel upd/s | serial upd/s | speedup | p99 settle ms | gated |")
+print("|---|---|---|---|---|---|")
+for r in cell["rows"]:
+    print(f"| {r['batch']} | {r['parallel_updates_per_s']:.0f} "
+          f"| {r['serial_updates_per_s']:.0f} | {r['speedup']:.2f}x "
+          f"| {r['parallel_p99_ms']:.1f} | {'yes' if r['gated'] else ''} |")
+PYEOF
+fi
 
 # replication leg (DESIGN.md §15): 1 writer + 2 replicas (+1 late joiner)
 # tailing the WAL under sustained ingest with rotation every few batches.

@@ -15,7 +15,9 @@ from .engine import (
 from . import resident
 from .resident import run_resident, trace_count
 from .semicore import HostEngine, DecompResult, decompose
-from .maintenance import CoreMaintainer, MaintStats
+from .update import Delete, Insert, UpdateBatch
+from .maintenance import BatchMaintStats, CoreMaintainer, MaintStats
+from .parallel_maint import DEFAULT_GROUP_CAP, grouped_settle, plan_batch
 
 __all__ = [
     "imcore_bz", "imcore_peel", "emcore", "EMCoreResult",
@@ -24,5 +26,7 @@ __all__ = [
     "PallasBackend", "PassPlanner", "resolve_backend", "run_batch",
     "resident", "run_resident", "trace_count",
     "HostEngine", "DecompResult", "decompose",
-    "CoreMaintainer", "MaintStats",
+    "Insert", "Delete", "UpdateBatch",
+    "CoreMaintainer", "MaintStats", "BatchMaintStats",
+    "DEFAULT_GROUP_CAP", "grouped_settle", "plan_batch",
 ]

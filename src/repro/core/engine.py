@@ -44,6 +44,7 @@ from functools import lru_cache
 
 import numpy as np
 
+from .. import runtime as _runtime
 from ..obs import metrics as _metrics, trace as _trace
 from .localcore import h_index_batch, compute_cnt_batch
 
@@ -615,8 +616,7 @@ class PallasBackend(DeviceBackend):
         self.seg_ptr = rs.seg_ptr  # flat-table offsets, for block coverage
         self.be = self._block_edges(planner)
         self.nb = -(-max(rs.E, 1) // self.be)
-        self._rows_j = rs.rows_j
-        self._nbr_j = rs.nbr_j
+        self._nbr_j, self._rows_j = rs.edge_table("pallas")
 
     def unbind(self):
         # don't keep per-pass state alive on a long-lived maintainer between
@@ -795,11 +795,12 @@ class ShardedBackend(DeviceBackend):
 
 def resolve_backend(backend) -> ComputeBackend:
     """Backend instance passthrough, or by name; ``None`` defers to the
-    ``REPRO_BACKEND`` environment variable (default: numpy)."""
+    ``REPRO_BACKEND`` environment variable (default: numpy), resolved
+    through :func:`repro.runtime.setting` like every other knob."""
     if isinstance(backend, ComputeBackend):
         return backend
     if backend is None:
-        backend = os.environ.get(BACKEND_ENV_VAR, "numpy") or "numpy"
+        backend = _runtime.setting("backend") or "numpy"
     name = str(backend)
     if name == "numpy":
         return NumpyBackend()

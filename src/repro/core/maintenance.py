@@ -19,15 +19,18 @@ this reading the final cnt values are exactly Eq. 2 w.r.t. the new cores
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
+from .. import runtime as _runtime
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from ..obs import metrics as _metrics, trace as _trace
 from .engine import ComputeBackend, resolve_backend, warm_settle
 from .semicore import HostEngine
+from .update import Delete, Insert, UpdateBatch
 
 __all__ = ["MaintStats", "BatchMaintStats", "CoreMaintainer"]
 
@@ -53,27 +56,32 @@ _PHI, _Q, _CIRC, _CROSS = 0, 1, 2, 3
 
 @dataclass
 class MaintStats:
-    algorithm: str
-    node_computations: int
-    edge_block_reads: int
-    node_table_reads: int
-    iterations: int
-    num_changed: int
+    """Unified maintenance result — per-edge ops and micro-batches alike.
 
-
-@dataclass
-class BatchMaintStats:
-    """Aggregate stats for one micro-batch of edge updates (stream path)."""
+    The positional prefix (algorithm .. num_changed) is the historical
+    per-edge ``MaintStats``; the ``num_*`` trio is the historical
+    ``BatchMaintStats`` (now an alias); the ``groups``/``largest_group``/
+    ``fallbacks``/``settle_passes`` tail is the parallel grouped settle
+    (DESIGN.md §18) and stays zero on every serial path.
+    """
 
     algorithm: str
-    num_deletes: int
-    num_inserts: int
-    num_noops: int  # updates already reflected in the graph (skipped)
-    node_computations: int
-    edge_block_reads: int
-    node_table_reads: int
-    iterations: int
-    num_changed: int  # nodes whose core differs from the batch-start core
+    node_computations: int = 0
+    edge_block_reads: int = 0
+    node_table_reads: int = 0
+    iterations: int = 0
+    num_changed: int = 0  # nodes whose core differs from the op-start core
+    num_deletes: int = 0
+    num_inserts: int = 0
+    num_noops: int = 0  # updates already reflected in the graph (skipped)
+    groups: int = 0  # independent groups planned by the parallel settle
+    largest_group: int = 0  # candidate-node count of the largest group
+    fallbacks: int = 0  # ineligible groups + feasibility escalations
+    settle_passes: int = 0  # fixpoint passes of the grouped settle
+
+
+#: historical name for the micro-batch result (same type since the unification)
+BatchMaintStats = MaintStats
 
 
 class CoreMaintainer:
@@ -100,10 +108,22 @@ class CoreMaintainer:
         backend=None,
         superstep_chunk: int | None = None,
         retry=None,
+        settings: "_runtime.Settings | None" = None,
+        group_cap: int | None = None,
     ):
+        if settings is not None:
+            if backend is None:
+                backend = settings.backend
+            if superstep_chunk is None:
+                superstep_chunk = settings.resident_chunk
+        self._parallel_default = (
+            None if settings is None else settings.parallel_maint)
+        self.settings = settings
+        self.group_cap = group_cap
         self.bg = graph if isinstance(graph, BufferedGraph) else BufferedGraph(graph)
         self.engine = HostEngine(
-            self.bg, block_edges, pool_blocks=pool_blocks, retry=retry)
+            self.bg, block_edges, pool_blocks=pool_blocks, retry=retry,
+            settings=settings)
         self.backend = resolve_backend(backend)
         self.superstep_chunk = superstep_chunk
         if self.backend.device_resident and not isinstance(
@@ -138,52 +158,79 @@ class CoreMaintainer:
         )
 
     # =====================================================================
-    # Micro-batch application (streaming §V: deletes first, then inserts)
+    # Unified update surface (streaming §V; DESIGN.md §18)
     # =====================================================================
+    def apply(
+        self,
+        batch: UpdateBatch,
+        insert_algorithm: str = "semiinsert*",
+    ) -> MaintStats:
+        """Apply one micro-batch of typed, order-preserving updates.
+
+        This is the single maintenance entry point: ``batch`` is an
+        :class:`UpdateBatch` of :class:`Insert`/:class:`Delete` ops (any
+        iterable of ops is promoted).  Updates already reflected in the
+        graph (deleting a missing edge, inserting a present one) count as
+        no-ops — the stream admission path resolves each edge's *final*
+        state, so a no-op just means the stream and the graph agree.
+
+        Dispatch: the parallel independent-group settle (DESIGN.md §18)
+        unless ``REPRO_PARALLEL_MAINT=0`` / ``Settings.parallel_maint``
+        disables it, in which case the serial oracle runs — the paper's
+        per-edge seq maintenance (Algs. 6-8) on numpy, one warm-started
+        SemiCore* batch settle on device backends.  Every path lands on the
+        same exact (core, cnt) fixpoint.
+        """
+        if not isinstance(batch, UpdateBatch):
+            batch = UpdateBatch(tuple(batch))
+        if _runtime.setting("parallel_maint", self._parallel_default):
+            return self._apply_parallel(batch, insert_algorithm)
+        if self.backend.name != "numpy":
+            return self._apply_batch_settled(batch.deletes, batch.inserts)
+        return self._apply_per_edge(batch, insert_algorithm)
+
     def apply_batch(
         self,
         deletes,
         inserts,
         insert_algorithm: str = "semiinsert*",
     ) -> BatchMaintStats:
-        """Apply a coalesced micro-batch of updates, deletes before inserts.
+        """Deprecated shim: use :meth:`apply` with an :class:`UpdateBatch`.
 
-        Updates that are already reflected in the graph (deleting a missing
-        edge, inserting a present one) are counted as no-ops rather than
-        raised — the stream admission path resolves each edge's *final*
-        state, so a no-op just means the stream and the graph already agree.
-
-        On a non-numpy backend the whole batch settles in one warm-started
-        SemiCore* batch run instead of per-edge seq maintenance.
+        Equivalent to ``apply(UpdateBatch.from_pairs(deletes, inserts))``
+        (deletes first — the historical coalesced order).
         """
-        if self.backend.name != "numpy":
-            return self._apply_batch_settled(deletes, inserts)
+        warnings.warn(
+            "CoreMaintainer.apply_batch(deletes, inserts) is deprecated; "
+            "use apply(UpdateBatch.from_pairs(deletes, inserts))",
+            DeprecationWarning, stacklevel=2)
+        return self.apply(UpdateBatch.from_pairs(deletes, inserts),
+                          insert_algorithm=insert_algorithm)
+
+    def _apply_per_edge(self, batch: UpdateBatch,
+                        insert_algorithm: str) -> MaintStats:
+        """The paper's serial per-edge maintenance, in op order."""
         snap = self._io_snapshot()
         core0 = self.core.copy()
         comp = iters = nd = ni = noop = 0
         t0 = time.perf_counter()
         with _trace.span("maintenance.apply_batch", cat="maintenance",
-                         path="per-edge", deletes=len(deletes),
-                         inserts=len(inserts)) as sp:
-            for u, v in deletes:
+                         path="per-edge", deletes=len(batch.deletes),
+                         inserts=len(batch.inserts)) as sp:
+            for op in batch:
                 try:
-                    s = self.delete_edge(int(u), int(v))
+                    if isinstance(op, Delete):
+                        s = self._delete_edge(int(op.u), int(op.v))
+                        nd += 1
+                    else:
+                        s = self._insert_edge(int(op.u), int(op.v),
+                                              algorithm=insert_algorithm)
+                        ni += 1
                 except KeyError:
                     noop += 1
                     continue
                 comp += s.node_computations
                 iters += s.iterations
-                nd += 1
-            for u, v in inserts:
-                try:
-                    s = self.insert_edge(int(u), int(v),
-                                         algorithm=insert_algorithm)
-                except KeyError:
-                    noop += 1
-                    continue
-                comp += s.node_computations
-                iters += s.iterations
-                ni += 1
             if sp.active:
                 sp.set(applied=nd + ni, noops=noop)
         _SETTLE_SECONDS.labels(path="per-edge").observe(
@@ -191,7 +238,7 @@ class CoreMaintainer:
         _BATCHES.labels(path="per-edge").inc()
         _UPDATES_APPLIED.labels(path="per-edge").inc(nd + ni)
         io = self._io_delta(snap)
-        return BatchMaintStats(
+        return MaintStats(
             algorithm=f"batch({insert_algorithm})",
             num_deletes=nd,
             num_inserts=ni,
@@ -201,6 +248,92 @@ class CoreMaintainer:
             node_table_reads=io[1],
             iterations=iters,
             num_changed=int((self.core != core0).sum()),
+        )
+
+    def _apply_parallel(self, batch: UpdateBatch,
+                        insert_algorithm: str) -> MaintStats:
+        """Parallel independent-group settle (DESIGN.md §18).
+
+        Structural phase first: every op lands in the buffered graph and
+        its Eq. 2 delta lands in cnt — all w.r.t. the *pre-batch* cores, so
+        after the loop cnt is exactly Eq. 2 (core0, post-batch graph).
+        :func:`parallel_maint.grouped_settle` then plans per-update
+        candidate sets, partitions them into independent groups and settles
+        the whole batch in saturation rounds — host-side peel of each
+        level's exact rise set, then one group-masked device fixpoint per
+        round, re-rooted at capped risers until exact.  Oversized candidate
+        sets and a failed cnt>=core certificate escalate to the serial warm
+        settle, so every path lands on the same fixpoint.
+        """
+        from .parallel_maint import DEFAULT_GROUP_CAP, grouped_settle
+
+        snap = self._io_snapshot()
+        core0 = self.core
+        cnt = self.cnt
+        nd = ni = noop = 0
+        applied: list = []
+        t0 = time.perf_counter()
+        with _trace.span("maintenance.parallel_settle", cat="maintenance",
+                         path="parallel", backend=self.backend.name,
+                         deletes=len(batch.deletes),
+                         inserts=len(batch.inserts)) as sp:
+            for op in batch:
+                u, v = int(op.u), int(op.v)
+                if isinstance(op, Delete):
+                    if not self.bg.delete_edge(u, v):
+                        noop += 1
+                        continue
+                    nd += 1
+                    if core0[u] <= core0[v]:
+                        cnt[u] -= 1
+                    if core0[v] <= core0[u]:
+                        cnt[v] -= 1
+                    applied.append(("-", u, v))
+                else:
+                    if not self.bg.insert_edge(u, v):
+                        noop += 1
+                        continue
+                    ni += 1
+                    if core0[u] <= core0[v]:
+                        cnt[u] += 1
+                    if core0[v] <= core0[u]:
+                        cnt[v] += 1
+                    applied.append(("+", u, v))
+            changed = 0
+            groups = largest = fallbacks = passes = comp = 0
+            if applied:
+                cap = (DEFAULT_GROUP_CAP if self.group_cap is None
+                       else self.group_cap)
+                core_f, cnt_f, plan, info = grouped_settle(
+                    self, applied, cap)
+                changed = int((core_f != core0).sum())
+                groups = len(plan.groups)
+                largest = plan.largest_group
+                fallbacks = info["fallbacks"]
+                passes = info["iterations"]
+                comp = info["node_computations"]
+            if sp.active:
+                sp.set(applied=nd + ni, noops=noop, groups=groups,
+                       fallbacks=fallbacks, iterations=passes)
+        _SETTLE_SECONDS.labels(path="parallel").observe(
+            time.perf_counter() - t0)
+        _BATCHES.labels(path="parallel").inc()
+        _UPDATES_APPLIED.labels(path="parallel").inc(nd + ni)
+        io = self._io_delta(snap)
+        return MaintStats(
+            algorithm=f"parallel({self.backend.name})",
+            num_deletes=nd,
+            num_inserts=ni,
+            num_noops=noop,
+            node_computations=comp,
+            edge_block_reads=io[0],
+            node_table_reads=io[1],
+            iterations=passes,
+            num_changed=changed,
+            groups=groups,
+            largest_group=largest,
+            fallbacks=fallbacks,
+            settle_passes=passes,
         )
 
     def _apply_batch_settled(self, deletes, inserts) -> BatchMaintStats:
@@ -254,6 +387,14 @@ class CoreMaintainer:
     # Algorithm 6: SemiDelete*
     # =====================================================================
     def delete_edge(self, u: int, v: int) -> MaintStats:
+        """Deprecated shim: use ``apply(UpdateBatch((Delete(u, v),)))``."""
+        warnings.warn(
+            "CoreMaintainer.delete_edge(u, v) is deprecated; use "
+            "apply(UpdateBatch((Delete(u, v),)))",
+            DeprecationWarning, stacklevel=2)
+        return self._delete_edge(u, v)
+
+    def _delete_edge(self, u: int, v: int) -> MaintStats:
         if not self.bg.delete_edge(u, v):
             raise KeyError(f"edge ({u}, {v}) does not exist")
         snap = self._io_snapshot()
@@ -281,12 +422,22 @@ class CoreMaintainer:
             io[1],
             r.iterations,
             int((self.core != old_core).sum()),
+            num_deletes=1,
         )
 
     # =====================================================================
     # Algorithm 7: SemiInsert (two-phase)
     # =====================================================================
     def insert_edge(self, u: int, v: int, algorithm: str = "semiinsert*") -> MaintStats:
+        """Deprecated shim: use ``apply(UpdateBatch((Insert(u, v),)))``."""
+        warnings.warn(
+            "CoreMaintainer.insert_edge(u, v) is deprecated; use "
+            "apply(UpdateBatch((Insert(u, v),)))",
+            DeprecationWarning, stacklevel=2)
+        return self._insert_edge(u, v, algorithm=algorithm)
+
+    def _insert_edge(self, u: int, v: int,
+                     algorithm: str = "semiinsert*") -> MaintStats:
         if algorithm == "semiinsert*":
             return self._insert_star(u, v)
         return self._insert_two_phase(u, v)
@@ -360,6 +511,7 @@ class CoreMaintainer:
             io[1],
             iters + r.iterations,
             int((self.core != old_core).sum()),
+            num_inserts=1,
         )
 
     # =====================================================================
@@ -460,4 +612,5 @@ class CoreMaintainer:
             io[1],
             iters,
             int((self.core != old_core).sum()),
+            num_inserts=1,
         )

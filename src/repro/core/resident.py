@@ -46,6 +46,7 @@ from functools import lru_cache
 
 import numpy as np
 
+from .. import runtime as _runtime
 from ..obs import trace as _trace
 # registry series shared with the per-pass path: the replay increments the
 # exact counters engine.run_batch / PallasBackend.begin_pass would have
@@ -90,8 +91,9 @@ def trace_count() -> int:
 
 def resident_enabled() -> bool:
     """Device residency is the default for device backends;
-    ``REPRO_DEVICE_RESIDENT=0`` falls back to the per-pass PR 3 path."""
-    return os.environ.get(RESIDENT_ENV_VAR, "1") != "0"
+    ``REPRO_DEVICE_RESIDENT=0`` falls back to the per-pass PR 3 path.
+    Resolved through :func:`repro.runtime.setting`."""
+    return _runtime.setting("device_resident")
 
 
 def chunk_len(explicit: int | None = None) -> int:
@@ -99,10 +101,7 @@ def chunk_len(explicit: int | None = None) -> int:
     ``superstep_chunk`` threaded from configs/owners) > env > default."""
     if explicit is not None:
         return max(1, int(explicit))
-    try:
-        return max(1, int(os.environ.get(CHUNK_ENV_VAR, DEFAULT_CHUNK)))
-    except ValueError:
-        return DEFAULT_CHUNK
+    return _runtime.setting("resident_chunk")
 
 
 # ===========================================================================
@@ -151,10 +150,12 @@ class ResidentStructure:
     E: int                   # merged flat edge count (buffered deltas applied)
     dmax: int                # max merged degree (pallas float32-range check)
     seg_ptr: np.ndarray      # (n+1,) int64 flat-table offsets, host
-    nbr_j: object            # (E,) int32 device — edge targets
-    rows_j: object           # (E,) int32 device — edge source per slot
+    nbr_j: object            # (E_pad,) int32 device — edge targets
+    rows_j: object           # (E_pad,) int32 device — edge source per slot
     segptr_j: object         # (n+1,) int32 device — flat-table offsets
+    E_pad: int = 0           # bucket-padded device length (>= E)
     fused_tables: dict = field(default_factory=dict)
+    trimmed: tuple | None = None  # cached (nbr, rows) exact-E device views
 
     def matches(self, planner) -> bool:
         buffered = planner.eng.buffered
@@ -170,10 +171,43 @@ class ResidentStructure:
         if ft is None:
             from ..kernels.fused_superstep import build_fused_table
 
-            ft = build_fused_table(self.seg_ptr, np.asarray(self.nbr_j),
+            ft = build_fused_table(self.seg_ptr,
+                                   np.asarray(self.nbr_j)[:self.E],
                                    self.n, block_edges)
             self.fused_tables[block_edges] = ft
         return ft
+
+    def edge_table(self, kind: str):
+        """(nbr, rows) device arrays for one substrate.
+
+        The xla substrate reduces edges exclusively through segptr-bounded
+        prefix sums (:func:`_sorted_segsum`), so it takes the bucket-padded
+        table as-is: the padded tail can never reach a segment sum, and the
+        stable shape keeps the chunk jits cached across structural versions
+        (the maintenance hot loop would otherwise recompile on every edge
+        insert/delete).  The pallas blocked kernels scatter by edge slot and
+        get the exact-length view instead."""
+        if kind != "pallas" or self.E == self.E_pad:
+            return self.nbr_j, self.rows_j
+        if self.trimmed is None:
+            self.trimmed = (self.nbr_j[:self.E], self.rows_j[:self.E])
+        return self.trimmed
+
+
+_EDGE_BUCKET = 8192
+
+
+def _edge_pad(E: int) -> int:
+    """Device-table length for ``E`` edge slots: next power of two below one
+    bucket, then bucket multiples.  Small graphs recompile O(log E) times as
+    they grow; at scale the shape only changes when E crosses a bucket
+    boundary, so the maintenance undo/redo churn (±batch edges per round)
+    almost never invalidates the chunk jit cache."""
+    if E <= 0:
+        return 0
+    if E < _EDGE_BUCKET:
+        return 1 << (E - 1).bit_length()
+    return -(-E // _EDGE_BUCKET) * _EDGE_BUCKET
 
 
 def build_structure(planner) -> ResidentStructure:
@@ -194,16 +228,22 @@ def build_structure(planner) -> ResidentStructure:
             f"n={n} exceeds 2**31; use the numpy backend (or shard via "
             "distributed.py) for this graph")
     lens = np.diff(seg_ptr)
-    rows = np.repeat(np.arange(n, dtype=np.int64), lens).astype(np.int32)
+    E = int(len(nbr_flat))
+    E_pad = _edge_pad(E)
+    nbr = np.zeros(E_pad, dtype=np.int32)
+    nbr[:E] = nbr_flat
+    rows = np.zeros(E_pad, dtype=np.int32)
+    rows[:E] = np.repeat(np.arange(n, dtype=np.int64), lens)
     buffered = planner.eng.buffered
     return ResidentStructure(
         graph=planner.eng.graph,
         version=buffered.version if buffered is not None else 0,
         n=n,
-        E=int(len(nbr_flat)),
+        E=E,
+        E_pad=E_pad,
         dmax=int(lens.max()) if len(lens) else 0,
         seg_ptr=np.asarray(seg_ptr, dtype=np.int64),
-        nbr_j=jnp.asarray(np.asarray(nbr_flat, dtype=np.int32)),
+        nbr_j=jnp.asarray(nbr),
         rows_j=jnp.asarray(rows),
         segptr_j=jnp.asarray(np.asarray(seg_ptr, dtype=np.int32)),
     )
@@ -250,8 +290,16 @@ def _substrate(kind: str, block_edges: int, interpret: bool):
 
 @lru_cache(maxsize=None)
 def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
-               fused: bool = False):
+               fused: bool = False, masked: bool = False):
     """Build + jit the chunked superstep for one substrate × algorithm.
+
+    With ``masked`` (semicore* only — the grouped-maintenance settle,
+    DESIGN.md §18) the chunk takes one extra ``cand`` bool operand and every
+    pass ANDs it into the next frontier: non-candidate nodes are frozen —
+    their core is never recomputed (the frontier is the only thing that
+    writes core) while their cnt still receives exact push decrements from
+    falling candidate neighbors, so independent groups converge inside the
+    same ``lax.scan`` without interacting.
 
     ``num_probes`` / ``num_segments`` / ``chunk`` are static: one compile per
     decompose (jax re-traces only on new shapes or probe counts — O(log kmax)
@@ -272,6 +320,10 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
     """
     import jax
     import jax.numpy as jnp
+
+    if masked and algorithm != "semicore*":
+        raise ValueError("masked settle is a semicore* (cnt-gated) "
+                         f"discipline; got {algorithm!r}")
 
     if fused:
         from ..kernels import fused_superstep as fsk
@@ -331,16 +383,16 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
                 return core, active, done, fronts, upds, ran
 
         elif algorithm == "semicore*":
-            def chunk(core, cnt, active, arrs, *, num_probes, num_segments,
-                      chunk, dims):
-                _TRACE_COUNT[0] += 1
-
+            def _scan_star(core, cnt, active, cand, arrs, num_probes, chunk,
+                           dims):
                 def run(args):
                     core, cnt, active = args
                     core2, cnt2, active2, upd = fsk.fused_pass(
                         core, cnt, active, arrs, dims=dims,
                         num_probes=num_probes, algorithm="semicore*",
                         interpret=interpret)
+                    if cand is not None:
+                        active2 = active2 & cand
                     return (core2, cnt2, active2), upd
 
                 def skip(args):
@@ -356,6 +408,19 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
                     step, (core, cnt, active), None, length=chunk)
                 done = ~jnp.any(active)
                 return core, cnt, active, done, fronts, upds, ran
+
+            if masked:
+                def chunk(core, cnt, active, cand, arrs, *, num_probes,
+                          num_segments, chunk, dims):
+                    _TRACE_COUNT[0] += 1
+                    return _scan_star(core, cnt, active, cand, arrs,
+                                      num_probes, chunk, dims)
+            else:
+                def chunk(core, cnt, active, arrs, *, num_probes,
+                          num_segments, chunk, dims):
+                    _TRACE_COUNT[0] += 1
+                    return _scan_star(core, cnt, active, None, arrs,
+                                      num_probes, chunk, dims)
 
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -443,9 +508,8 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
         # cnt-gated (Lemma 4.2) with exact cnt maintenance under
         # simultaneous updates: refresh vs pass-start values, then the
         # UpdateNbrCnt push rule (DESIGN.md §2) — all on device
-        def chunk(core, cnt, active, nbr, rows, segptr, *, num_probes,
-                  num_segments, chunk):
-            _TRACE_COUNT[0] += 1
+        def _scan_star(core, cnt, active, cand, nbr, rows, segptr,
+                       num_probes, num_segments, chunk):
             row_sum = _sorted_segsum(segptr)
 
             def run(args):
@@ -475,6 +539,8 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
                 dec = row_sum(push.astype(jnp.int32))
                 cnt2 = jnp.where(active, refreshed, cnt) - dec
                 active2 = (cnt2 < core2) & (core2 > 0)
+                if cand is not None:
+                    active2 = active2 & cand
                 return (core2, cnt2, active2), upd
 
             def skip(args):
@@ -490,6 +556,19 @@ def _chunk_fns(kind: str, block_edges: int, interpret: bool, algorithm: str,
                 step, (core, cnt, active), None, length=chunk)
             done = ~jnp.any(active)
             return core, cnt, active, done, fronts, upds, ran
+
+        if masked:
+            def chunk(core, cnt, active, cand, nbr, rows, segptr, *,
+                      num_probes, num_segments, chunk):
+                _TRACE_COUNT[0] += 1
+                return _scan_star(core, cnt, active, cand, nbr, rows, segptr,
+                                  num_probes, num_segments, chunk)
+        else:
+            def chunk(core, cnt, active, nbr, rows, segptr, *, num_probes,
+                      num_segments, chunk):
+                _TRACE_COUNT[0] += 1
+                return _scan_star(core, cnt, active, None, nbr, rows, segptr,
+                                  num_probes, num_segments, chunk)
 
         return jax.jit(chunk,
                        static_argnames=("num_probes", "num_segments", "chunk"))
@@ -577,7 +656,8 @@ def run_resident(engine, algorithm: str, backend, *,
                  cnt: np.ndarray | None = None,
                  initial_cnt_scan: bool = False,
                  superstep_chunk: int | None = None,
-                 max_supersteps: int | None = None):
+                 max_supersteps: int | None = None,
+                 settle_mask: np.ndarray | None = None):
     """Run a batch-schedule decomposition with the fixpoint device-resident.
 
     Mirrors :func:`engine.run_batch` pass-for-pass (same frontiers, same
@@ -587,6 +667,12 @@ def run_resident(engine, algorithm: str, backend, *,
     exactly on device from the warm ``core`` upper bound — one accounted
     full scan — before the SemiCore* passes.
 
+    ``settle_mask`` (semicore* only) freezes every node outside the mask:
+    the frontier starts at ``(cnt < core) & (core > 0) & mask`` and stays
+    inside the mask for the whole run — the grouped-maintenance settle
+    (DESIGN.md §18).  Frozen nodes keep their core; their cnt still takes
+    exact push decrements from falling masked neighbors.
+
     A mesh-sharded backend (``ShardedBackend``) dispatches to
     :func:`run_sharded`: same contract, edge table sharded over the mesh.
     """
@@ -594,10 +680,13 @@ def run_resident(engine, algorithm: str, backend, *,
         return run_sharded(engine, algorithm, backend, core=core, cnt=cnt,
                            initial_cnt_scan=initial_cnt_scan,
                            superstep_chunk=superstep_chunk,
-                           max_supersteps=max_supersteps)
+                           max_supersteps=max_supersteps,
+                           settle_mask=settle_mask)
     if max_supersteps is not None:
         raise ValueError("max_supersteps is only supported on the shard "
                          "backend (chunk-granular budgeted runs)")
+    if settle_mask is not None and algorithm != "semicore*":
+        raise ValueError("settle_mask is a semicore* (cnt-gated) discipline")
 
     import jax.numpy as jnp
 
@@ -624,14 +713,16 @@ def run_resident(engine, algorithm: str, backend, *,
     else:
         fused = False
 
+    nbr_j, rows_j = rs.edge_table(kind)
+
     def substrate_args():
         """Positional + static-kw tail of the chunk fns for this substrate:
         the fused path ships the compact-rank kernel table, the per-probe
-        paths the flat edge table."""
+        paths the flat edge table (bucket-padded for xla, exact for pallas)."""
         if fused:
             ft = rs.fused(fsk.fused_block_edges(rs.E))
             return (ft.arrays,), {"dims": ft.dims}
-        return (rs.nbr_j, rs.rows_j, rs.segptr_j), {}
+        return (nbr_j, rows_j, rs.segptr_j), {}
 
     warm = core is not None
     if warm:
@@ -685,7 +776,7 @@ def run_resident(engine, algorithm: str, backend, *,
                                        num_probes=num_probes, **skw)
                 elif rs.E:
                     counts_all = _counts_all_fn(kind, be, interpret)
-                    cnt_j = counts_all(core_j, rs.nbr_j, rs.rows_j,
+                    cnt_j = counts_all(core_j, nbr_j, rows_j,
                                        rs.segptr_j, num_segments=n)
                 else:
                     cnt_j = jnp.zeros((n,), jnp.int32)
@@ -698,6 +789,8 @@ def run_resident(engine, algorithm: str, backend, *,
             cnt = np.zeros(n, dtype=np.int64)
             cnt_j = jnp.zeros((n,), jnp.int32)
         active0 = (cnt < core) & (core > 0)
+        if settle_mask is not None:
+            active0 &= np.asarray(settle_mask, dtype=bool)
         if rs.E == 0:
             # edgeless table: any deficient node drops straight to h = 0 in
             # one pass, and nothing can re-activate — numpy's loop verbatim
@@ -716,8 +809,12 @@ def run_resident(engine, algorithm: str, backend, *,
         if not active0.any():
             # settled warm state: zero passes, like numpy's while-loop
             return result(core, cnt)
-        fn = _chunk_fns(kind, be, interpret, algorithm, fused)
+        masked = settle_mask is not None
+        fn = _chunk_fns(kind, be, interpret, algorithm, fused, masked)
         sargs, skw = substrate_args()
+        if masked:
+            cand_j = jnp.asarray(np.asarray(settle_mask, dtype=bool))
+            sargs = (cand_j,) + sargs
         active_j = jnp.asarray(active0)
         while True:
             with _trace.span("resident.chunk", cat="engine",
@@ -944,7 +1041,7 @@ def _local_segsum(lseg):
 
 @lru_cache(maxsize=None)
 def _shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
-                    chunk: int, unroll: bool):
+                    chunk: int, unroll: bool, masked: bool = False):
     """Build + jit the on-mesh chunked superstep for one mesh × algorithm.
 
     The per-shard superstep body is the same fused arithmetic the flat
@@ -1070,10 +1167,17 @@ def _shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
     elif algorithm == "semicore*":
         # cnt-gated (Lemma 4.2) with exact cnt maintenance: cnt stays
         # owner-local (each shard maintains its owned slice), the push rule
-        # reads the gathered core2 in place of the neighbor's local h
-        def body(core, cnt_b, active_b, nact, dst, rows, emask, lseg,
-                 owned_ids, owned_mask):
+        # reads the gathered core2 in place of the neighbor's local h.
+        # ``masked`` adds a per-slot candidate operand ANDed into every
+        # next frontier (the grouped-maintenance settle, DESIGN.md §18).
+        def body(core, cnt_b, active_b, nact, *tail):
             _TRACE_COUNT[0] += 1
+            if masked:
+                cand_b, dst, rows, emask, lseg, owned_ids, owned_mask = tail
+                (cand,) = strip(cand_b)
+            else:
+                dst, rows, emask, lseg, owned_ids, owned_mask = tail
+                cand = None
             dst, rows, emask, lseg, owned_ids, owned_mask, cnt0, active0 = \
                 strip(dst, rows, emask, lseg, owned_ids, owned_mask, cnt_b,
                       active_b)
@@ -1106,6 +1210,8 @@ def _shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
                 dec = segsum(push.astype(jnp.int32), rows, 0)
                 cnt2 = jnp.where(active, refreshed, cnt) - dec
                 active2 = (cnt2 < c_new) & (c_new > 0) & owned_mask
+                if cand is not None:
+                    active2 = active2 & cand
                 nact2 = jax.lax.psum(
                     jnp.sum(active2.astype(jnp.int32)), axes)
                 return (core2, cnt2, active2, nact2), upd
@@ -1124,8 +1230,9 @@ def _shard_chunk_fn(mesh, algorithm: str, n: int, num_probes: int,
             return (core, cnt[None], active[None], nact,
                     fronts[:, None, :], upds, ran)
 
-        in_specs = (repl, shard, shard, repl, shard, shard, shard, shard,
-                    shard, shard)
+        in_specs = (repl, shard, shard, repl) \
+            + ((shard,) if masked else ()) \
+            + (shard, shard, shard, shard, shard, shard)
         out_specs = (repl, shard, shard, repl, P(None, axes, None), repl,
                      repl)
 
@@ -1190,7 +1297,8 @@ def run_sharded(engine, algorithm: str, backend, *,
                 cnt: np.ndarray | None = None,
                 initial_cnt_scan: bool = False,
                 superstep_chunk: int | None = None,
-                max_supersteps: int | None = None):
+                max_supersteps: int | None = None,
+                settle_mask: np.ndarray | None = None):
     """Run a batch-schedule decomposition with the fixpoint on-mesh.
 
     The shard-layout sibling of the flat resident runner: identical passes,
@@ -1205,6 +1313,8 @@ def run_sharded(engine, algorithm: str, backend, *,
 
     from .engine import DecompResult
 
+    if settle_mask is not None and algorithm != "semicore*":
+        raise ValueError("settle_mask is a semicore* (cnt-gated) discipline")
     planner = engine.planner
     n = engine.n
     ss = backend.bind_resident(planner)
@@ -1255,7 +1365,8 @@ def run_sharded(engine, algorithm: str, backend, *,
         exactly (each distinct length hits the lru'd jit cache)."""
         c = chunk if max_supersteps is None else \
             max(1, min(chunk, max_supersteps - iters))
-        return _shard_chunk_fn(ss.mesh, algorithm, n, num_probes, c, unroll)
+        return _shard_chunk_fn(ss.mesh, algorithm, n, num_probes, c, unroll,
+                               settle_mask is not None)
 
     def result(core_f, cnt_f):
         backend.unbind()
@@ -1299,6 +1410,8 @@ def run_sharded(engine, algorithm: str, backend, *,
         else:
             cnt = np.zeros(n, dtype=np.int64)
         active0 = (cnt < core) & (core > 0)
+        if settle_mask is not None:
+            active0 &= np.asarray(settle_mask, dtype=bool)
         if ss.E == 0:
             # edgeless table: any deficient node drops straight to h = 0 in
             # one pass, and nothing can re-activate — numpy's loop verbatim
@@ -1319,14 +1432,19 @@ def run_sharded(engine, algorithm: str, backend, *,
             return result(core, cnt)
         cnt_lj = localize(cnt, 0, np.int32)
         act_lj = localize(active0, False, bool)
+        cand_args = ()
+        if settle_mask is not None:
+            cand_args = (localize(
+                np.asarray(settle_mask, dtype=bool), False, bool),)
         nact = np.int32(active0.sum())
         while True:
             with _trace.span("resident.chunk", cat="engine",
                              algorithm="semicore*", backend=backend.name,
                              shards=ss.S, chunk=chunk) as sp:
                 core_j, cnt_lj, act_lj, nact, fronts, upds, ran = budget_fn()(
-                    core_j, cnt_lj, act_lj, nact, ss.dst_j, ss.rows_j,
-                    ss.emask_j, ss.lseg_j, ss.owned_ids_j, ss.owned_mask_j)
+                    core_j, cnt_lj, act_lj, nact, *cand_args, ss.dst_j,
+                    ss.rows_j, ss.emask_j, ss.lseg_j, ss.owned_ids_j,
+                    ss.owned_mask_j)
                 iters, comp = _replay_chunk(
                     planner, ss, 0, 0, None, front_masks(fronts),
                     np.asarray(upds), np.asarray(ran), upd_hist, comp_hist,

@@ -31,15 +31,13 @@ plus node-table blocks for the scanned [v_min, v_max] range.
 """
 from __future__ import annotations
 
-import os
-
 import numpy as np
 
+from .. import runtime as _runtime
 from ..graph.storage import CSRGraph, BlockReader, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from ..obs import trace as _trace
-from .engine import (BACKEND_ENV_VAR, DecompResult, PassPlanner, _pass_obs,
-                     run_batch)
+from .engine import DecompResult, PassPlanner, _pass_obs, run_batch
 from .localcore import local_core
 
 __all__ = ["DecompResult", "HostEngine", "decompose"]
@@ -53,7 +51,7 @@ def _seq_only(backend) -> None:
     Internal reference-path callers pass ``backend="numpy"`` explicitly.
     """
     if backend is None:
-        backend = os.environ.get(BACKEND_ENV_VAR) or None
+        backend = _runtime.setting("backend")
     if backend is not None and str(getattr(backend, "name", backend)) != "numpy":
         raise ValueError(
             "schedule='seq' is the paper-faithful reference path and runs on "
@@ -78,7 +76,13 @@ class HostEngine:
         block_edges: int = DEFAULT_BLOCK_EDGES,
         pool_blocks: int = 1,
         retry=None,
+        settings: "_runtime.Settings | None" = None,
     ):
+        #: optional consolidated knob snapshot (repro.runtime.Settings);
+        #: supplies the default backend/chunk where a call leaves them None
+        #: (env vars still win — the documented env > override > default
+        #: order is applied per call through runtime.setting).
+        self.settings = settings
         if isinstance(graph, BufferedGraph):
             self.buffered: BufferedGraph | None = graph
             base = graph.base
@@ -114,12 +118,23 @@ class HostEngine:
     def n(self) -> int:
         return self.graph.n
 
+    def _defaults(self, backend, superstep_chunk):
+        """Fill unset per-call knobs from this engine's Settings."""
+        if self.settings is not None:
+            if backend is None:
+                backend = _runtime.setting("backend", self.settings.backend)
+            if superstep_chunk is None:
+                superstep_chunk = _runtime.setting(
+                    "resident_chunk", self.settings.resident_chunk)
+        return backend, superstep_chunk
+
     # =====================================================================
     # Algorithm 3: SemiCore
     # =====================================================================
     def semicore(self, schedule: str = "seq", backend=None,
                  superstep_chunk: int | None = None) -> DecompResult:
         if schedule == "batch":
+            backend, superstep_chunk = self._defaults(backend, superstep_chunk)
             return run_batch(self, "semicore", backend,
                              superstep_chunk=superstep_chunk)
         _seq_only(backend)
@@ -162,6 +177,7 @@ class HostEngine:
     def semicore_plus(self, schedule: str = "seq", backend=None,
                       superstep_chunk: int | None = None) -> DecompResult:
         if schedule == "batch":
+            backend, superstep_chunk = self._defaults(backend, superstep_chunk)
             return run_batch(self, "semicore+", backend,
                              superstep_chunk=superstep_chunk)
         _seq_only(backend)
@@ -233,6 +249,7 @@ class HostEngine:
         """Full Algorithm 5; with (core, cnt, vrange) given, runs its lines
         4-14 as a warm-started settle loop (used by SemiDelete*/SemiInsert)."""
         if schedule == "batch":
+            backend, superstep_chunk = self._defaults(backend, superstep_chunk)
             return run_batch(self, "semicore*", backend, core=core, cnt=cnt,
                              superstep_chunk=superstep_chunk)
         _seq_only(backend)
@@ -325,6 +342,7 @@ def decompose(
     pool_blocks: int = 1,
     backend=None,
     superstep_chunk: int | None = None,
+    settings: "_runtime.Settings | None" = None,
 ) -> DecompResult:
     """One-call core decomposition with the chosen paper algorithm.
 
@@ -334,8 +352,12 @@ def decompose(
     is the paper-faithful numpy reference path.  ``superstep_chunk`` sizes
     the device-resident passes-per-round-trip (CoreGraphConfig field /
     REPRO_RESIDENT_CHUNK env; DESIGN.md §12) — ignored off the resident path.
+    ``settings`` (a :class:`repro.runtime.Settings`) supplies defaults for
+    every knob left ``None`` here, with env vars still taking precedence —
+    the one env > override > default resolution order (DESIGN.md §18).
     """
-    eng = HostEngine(graph, block_edges, pool_blocks=pool_blocks)
+    eng = HostEngine(graph, block_edges, pool_blocks=pool_blocks,
+                     settings=settings)
     if algorithm == "semicore":
         return eng.semicore(schedule, backend=backend,
                             superstep_chunk=superstep_chunk)

@@ -33,9 +33,11 @@ def default_interpret() -> bool:
     replaces the old per-signature ``interpret: bool = True`` defaults that
     silently emulated on real hardware.
     """
-    env = os.environ.get(INTERPRET_ENV_VAR)
-    if env is not None:
-        return env.strip().lower() not in ("0", "false", "no", "off")
+    from repro import runtime as _runtime
+
+    resolved = _runtime.setting("pallas_interpret")
+    if resolved is not None:
+        return resolved
     import jax
 
     return jax.default_backend() not in ("tpu", "gpu")

@@ -79,9 +79,11 @@ _FALSY = ("0", "false", "no", "off")
 def fused_enabled() -> bool:
     """Hot-path switch: ``REPRO_PALLAS_FUSED=0`` reverts the pallas backend
     to the per-probe ``segment_sum_active`` dispatch (kept as the parity
-    oracle for the differential tests)."""
-    return os.environ.get("REPRO_PALLAS_FUSED", "1").strip().lower() \
-        not in _FALSY
+    oracle for the differential tests).  Resolved through
+    :func:`repro.runtime.setting`."""
+    from repro import runtime as _runtime
+
+    return _runtime.setting("pallas_fused")
 
 
 def fused_block_edges(num_edges: int | None = None) -> int:
@@ -93,9 +95,10 @@ def fused_block_edges(num_edges: int | None = None) -> int:
     Per-step interpreter overhead dominates small tiles on big graphs, while
     oversized tiles waste the tail block on small ones.
     """
-    raw = os.environ.get("REPRO_FUSED_BLOCK_EDGES", "").strip()
-    if raw:
-        v = int(raw)
+    from repro import runtime as _runtime
+
+    v = _runtime.setting("fused_block_edges")
+    if v is not None:
         if v < 8:
             raise ValueError(
                 f"REPRO_FUSED_BLOCK_EDGES must be >= 8, got {v}")

@@ -67,7 +67,9 @@ def obs_enabled() -> bool:
     """True unless the process was told ``REPRO_OBS=0``.
 
     Read from the environment on every call (a dict get, ~100ns) so the
-    switch works mid-process without re-importing anything.
+    switch works mid-process without re-importing anything; the parse rule
+    is declared with the rest of the knobs in :mod:`repro.runtime` (this
+    inline read keeps the per-``inc`` hot path one dict get).
     """
     return os.environ.get(OBS_ENV_VAR, "1") != "0"
 

@@ -10,6 +10,7 @@ query surface from their own views with per-reply staleness watermarks.
 WAL + snapshots give crash recovery via warm restart (DESIGN.md §9); the WAL
 rotates on snapshot publish so the log size tracks the snapshot interval.
 """
+from ..core.update import Delete, Insert, UpdateBatch
 from .admission import AdmittedBatch, admit_batch
 from .backpressure import AdmissionController, Overloaded
 from .integrity import CorruptionError, crc32c
@@ -20,6 +21,7 @@ from .wal import SnapshotStore, WalGap, WalTailer, WriteAheadLog
 from .workload import mixed_stream
 
 __all__ = [
+    "Insert", "Delete", "UpdateBatch",
     "AdmittedBatch", "admit_batch",
     "AdmissionController", "Overloaded",
     "CorruptionError", "crc32c",

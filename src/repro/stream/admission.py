@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..core.update import UpdateBatch
+
 __all__ = ["AdmittedBatch", "admit_batch"]
 
 INSERT = "+"
@@ -31,7 +33,8 @@ DELETE = "-"
 
 @dataclass
 class AdmittedBatch:
-    """A coalesced, reordered micro-batch ready for ``apply_batch``."""
+    """A coalesced, reordered micro-batch ready for ``CoreMaintainer.apply``
+    (via the :attr:`batch` projection)."""
 
     deletes: list = field(default_factory=list)  # [(u, v)], u < v
     inserts: list = field(default_factory=list)  # [(u, v)], u < v
@@ -42,6 +45,12 @@ class AdmittedBatch:
     @property
     def num_admitted(self) -> int:
         return len(self.deletes) + len(self.inserts)
+
+    @property
+    def batch(self) -> UpdateBatch:
+        """The admitted ops as a typed :class:`UpdateBatch` (deletes first —
+        the coalesced order admission decided on)."""
+        return UpdateBatch.from_pairs(self.deletes, self.inserts)
 
 
 def admit_batch(ops, n: int | None = None) -> AdmittedBatch:

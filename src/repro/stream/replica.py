@@ -11,7 +11,7 @@ tail, never a second copy of the edge-table machinery's write path.  A
   replica's ``(core, cnt)`` lands on the writer's exact fixpoint;
 * **tails** the WAL incrementally with :class:`~.wal.WalTailer` (byte-offset
   cursor, complete-records-only, rotation-aware), replaying each admitted
-  batch through its own ``CoreMaintainer.apply_batch`` — the same exact
+  batch through its own ``CoreMaintainer.apply`` — the same exact
   maintenance the writer ran — and publishing an :class:`EpochView` per
   batch.  Per-node core views converge correctly under asynchronous,
   replayed update orders (Montresor et al., arXiv 1103.5320); here the
@@ -38,6 +38,7 @@ from dataclasses import dataclass
 from ..core.engine import warm_settle
 from ..core.maintenance import CoreMaintainer
 from ..core.semicore import HostEngine
+from ..core.update import Delete
 from ..faults import CircuitBreaker
 from ..graph.storage import DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
@@ -186,13 +187,14 @@ class CoreReplica(QueryAPI):
         applied_d = applied_i = batches = updates = 0
         last_epoch = epoch0
         try:
-            for e, dels, ins in tailer.poll():
+            for e, batch in tailer.poll():
                 batches += 1
-                updates += len(dels) + len(ins)
-                for u, v in dels:
-                    applied_d += bool(bg.delete_edge(int(u), int(v)))
-                for u, v in ins:
-                    applied_i += bool(bg.insert_edge(int(u), int(v)))
+                updates += len(batch)
+                for op in batch:  # structural replay, in WAL op order
+                    if isinstance(op, Delete):
+                        applied_d += bool(bg.delete_edge(int(op.u), int(op.v)))
+                    else:
+                        applied_i += bool(bg.insert_edge(int(op.u), int(op.v)))
                 last_epoch = e
         except CorruptionError:
             # a corrupt record past the snapshot: bring the replica up on
@@ -258,8 +260,9 @@ class CoreReplica(QueryAPI):
         after a transient failure resumes exactly where the failure struck.
         """
         applied = 0
-        for e, dels, ins in self.tailer.poll():
-            self.maintainer.apply_batch(dels, ins, self.insert_algorithm)
+        for e, batch in self.tailer.poll():
+            self.maintainer.apply(batch,
+                                  insert_algorithm=self.insert_algorithm)
             self.epoch = e
             self.batches_applied += 1
             self._batches_ctr.inc()
@@ -295,7 +298,7 @@ class CoreReplica(QueryAPI):
     def sync(self, max_batches: int | None = None) -> int:
         """Drain newly durable WAL records into the epoch-view chain.
 
-        Replays each batch through ``CoreMaintainer.apply_batch`` — the
+        Replays each batch through ``CoreMaintainer.apply`` — the
         writer's own maintenance path, so the settled ``(core, cnt)`` is
         bit-identical to the writer's at the same epoch — and publishes one
         ``EpochView`` per batch.  Returns the number of batches applied

@@ -7,9 +7,10 @@ split CQRS-style (DESIGN.md §15):
 
 * **writes** (``CoreWriter``, this module) — an edge-update stream ingested
   in micro-batches.  Each batch is admitted (normalized / coalesced /
-  deletes-first, see admission.py), logged to the write-ahead log, then
-  applied through ``CoreMaintainer.apply_batch`` (SemiDelete* +
-  SemiInsert*), keeping ``core``/``cnt`` exact after every batch;
+  deletes-first, see admission.py), logged to the write-ahead log as a
+  typed op record, then applied through ``CoreMaintainer.apply`` (the
+  parallel grouped settle, or SemiDelete*/SemiInsert* when disabled),
+  keeping ``core``/``cnt`` exact after every batch;
 * **reads** (``QueryAPI``, shared) — ``coreness``, k-core membership, top-k
   by coreness and the degeneracy, answered from an immutable *epoch view*:
   a frozen copy of the O(n) node arrays published atomically after each
@@ -40,6 +41,7 @@ import numpy as np
 from ..core.engine import warm_settle
 from ..core.maintenance import CoreMaintainer
 from ..core.semicore import HostEngine
+from ..core.update import Delete, UpdateBatch
 from ..graph.storage import CSRGraph, DEFAULT_BLOCK_EDGES
 from ..graph.updates import BufferedGraph
 from ..obs import metrics as _metrics, trace as _trace
@@ -430,10 +432,15 @@ class CoreWriter(QueryAPI):
         admission_budget: int = 0,
         admission_soft_ratio: float = 0.5,
         admission_max_defer: int = 4,
+        settings=None,
     ):
+        # ``settings`` is a repro.runtime.Settings snapshot: one object that
+        # carries every REPRO_* knob through the service into the maintainer
+        # (env vars still win per the env > override > default order).
         self.maintainer = CoreMaintainer(
             graph, block_edges, state=state, pool_blocks=pool_blocks,
             backend=backend, superstep_chunk=superstep_chunk, retry=retry,
+            settings=settings,
         )
         self.bg: BufferedGraph = self.maintainer.bg
         self.insert_algorithm = insert_algorithm
@@ -491,11 +498,11 @@ class CoreWriter(QueryAPI):
             admitted: AdmittedBatch = admit_batch(ops, n=self.bg.n)
             next_epoch = self.epoch + 1
             if self.wal is not None:  # write-ahead: log before touching state
-                self.wal.append(next_epoch, admitted.deletes, admitted.inserts)
+                self.wal.append(next_epoch, admitted.batch)
             self._wal_tip = next_epoch
             flushes0 = self._flush_events
-            m = self.maintainer.apply_batch(
-                admitted.deletes, admitted.inserts, self.insert_algorithm
+            m = self.maintainer.apply(
+                admitted.batch, insert_algorithm=self.insert_algorithm
             )
             self.epoch = next_epoch
             self._publish()
@@ -552,7 +559,7 @@ class CoreWriter(QueryAPI):
                 self._apply_pending()  # stage-2 pressure: drain restores room
             next_tip = self._wal_tip + 1
             if self.wal is not None:  # durable on accept, even when deferred
-                self.wal.append(next_tip, admitted.deletes, admitted.inserts)
+                self.wal.append(next_tip, admitted.batch)
             self._wal_tip = next_tip
             adm.merge(admitted.deletes, admitted.inserts)
             if adm.should_apply():
@@ -600,11 +607,12 @@ class CoreWriter(QueryAPI):
         adm = self.admission
         t0 = time.perf_counter() if t0 is None else t0
         deletes, inserts = adm.take()
+        pending = UpdateBatch.from_pairs(deletes, inserts)
         flushes0 = self._flush_events
         ta = time.perf_counter()
-        m = self.maintainer.apply_batch(deletes, inserts, self.insert_algorithm)
-        adm.note_applied(len(deletes) + len(inserts),
-                         time.perf_counter() - ta)
+        m = self.maintainer.apply(pending,
+                                  insert_algorithm=self.insert_algorithm)
+        adm.note_applied(len(pending), time.perf_counter() - ta)
         self.epoch = self._wal_tip
         self._publish()
         stats = BatchStats(
@@ -759,7 +767,7 @@ class CoreWriter(QueryAPI):
             replay = WriteAheadLog.replay(wal_path, after_epoch=epoch0)
             while True:
                 try:
-                    e, dels, ins = next(replay)
+                    e, batch = next(replay)
                 except StopIteration:
                     break
                 except CorruptionError as err:
@@ -770,11 +778,12 @@ class CoreWriter(QueryAPI):
                             f.truncate(err.offset)
                     break
                 batches += 1
-                updates += len(dels) + len(ins)
-                for u, v in dels:
-                    applied_d += bool(bg.delete_edge(int(u), int(v)))
-                for u, v in ins:
-                    applied_i += bool(bg.insert_edge(int(u), int(v)))
+                updates += len(batch)
+                for op in batch:  # structural replay, in WAL op order
+                    if isinstance(op, Delete):
+                        applied_d += bool(bg.delete_edge(int(op.u), int(op.v)))
+                    else:
+                        applied_i += bool(bg.insert_edge(int(op.u), int(op.v)))
                 last_epoch = max(last_epoch, e)
 
         state = None

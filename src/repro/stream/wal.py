@@ -50,9 +50,11 @@ import json
 import os
 import shutil
 import time
+import warnings
 
 import numpy as np
 
+from ..core.update import UpdateBatch
 from ..faults import fs as _faults
 from ..graph.storage import CSRGraph
 from ..obs import metrics as _metrics, trace as _trace
@@ -138,6 +140,19 @@ def _parse_record(raw: bytes, *, path: str | None = None,
     return json.loads(raw.decode("utf-8", errors="replace"))
 
 
+def _record_batch(rec: dict) -> UpdateBatch:
+    """Decode a WAL record dict into its :class:`UpdateBatch`.
+
+    Current records carry the typed op vocabulary (``"ops"``: ordered
+    ``[kind, u, v]`` triples).  Legacy ``"del"``/``"ins"`` pair records
+    decode as deletes-then-inserts — the canonical coalesced order the
+    writer applied them in, so replay stays bit-identical.
+    """
+    if "ops" in rec:
+        return UpdateBatch.from_wire(rec["ops"])
+    return UpdateBatch.from_pairs(rec.get("del", ()), rec.get("ins", ()))
+
+
 class WriteAheadLog:
     """Append-only log of admitted micro-batches, keyed by epoch.
 
@@ -198,12 +213,24 @@ class WriteAheadLog:
                     size = start
                     f.truncate(size)
 
-    def append(self, epoch: int, deletes, inserts) -> None:
-        rec = {
-            "epoch": int(epoch),
-            "del": [[int(u), int(v)] for u, v in deletes],
-            "ins": [[int(u), int(v)] for u, v in inserts],
-        }
+    def append(self, epoch: int, batch, inserts=None) -> None:
+        """Append one admitted micro-batch as a typed op record.
+
+        ``batch`` is an :class:`UpdateBatch` (any iterable of
+        ``Insert``/``Delete`` ops is promoted).  The historical
+        ``append(epoch, deletes, inserts)`` pair form still works as a
+        deprecated shim — it encodes deletes-then-inserts, which is the
+        order the writer applied them in, so nothing changes on replay.
+        """
+        if inserts is not None:
+            warnings.warn(
+                "WriteAheadLog.append(epoch, deletes, inserts) is "
+                "deprecated; pass an UpdateBatch",
+                DeprecationWarning, stacklevel=2)
+            batch = UpdateBatch.from_pairs(batch, inserts)
+        elif not isinstance(batch, UpdateBatch):
+            batch = UpdateBatch(tuple(batch))
+        rec = {"epoch": int(epoch), "ops": batch.to_wire()}
         payload = json.dumps(rec, separators=(",", ":")).encode("utf-8")
         line = frame_record(payload)
         t0 = time.perf_counter()
@@ -307,7 +334,11 @@ class WriteAheadLog:
 
     @staticmethod
     def replay(path: str, after_epoch: int = -1):
-        """Yield ``(epoch, deletes, inserts)`` for batches past ``after_epoch``.
+        """Yield ``(epoch, UpdateBatch)`` for batches past ``after_epoch``.
+
+        Both record generations decode — typed ``"ops"`` records in op
+        order, legacy ``"del"``/``"ins"`` records as deletes-then-inserts
+        (see :func:`_record_batch`).
 
         Streams the log line-by-line (O(record) memory, never ``readlines``).
         A torn or checksum-corrupt *final* record is skipped (that batch was
@@ -339,11 +370,7 @@ class WriteAheadLog:
                     return
                 if rec["epoch"] <= after_epoch:
                     continue
-                yield (
-                    rec["epoch"],
-                    [tuple(e) for e in rec["del"]],
-                    [tuple(e) for e in rec["ins"]],
-                )
+                yield rec["epoch"], _record_batch(rec)
 
     @staticmethod
     def tip_epoch(path: str):
@@ -410,7 +437,7 @@ class WalTailer:
         self.records_read = 0
 
     def poll(self):
-        """Yield ``(epoch, deletes, inserts)`` newly durable since last poll."""
+        """Yield ``(epoch, UpdateBatch)`` newly durable since last poll."""
         _faults.on_op("wal.poll")
         if not os.path.exists(self.path):
             return
@@ -456,11 +483,7 @@ class WalTailer:
                     )
                 self.last_epoch = epoch
                 self.records_read += 1
-                yield (
-                    epoch,
-                    [tuple(e) for e in rec["del"]],
-                    [tuple(e) for e in rec["ins"]],
-                )
+                yield epoch, _record_batch(rec)
 
 
 class SnapshotStore:

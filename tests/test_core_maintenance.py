@@ -7,6 +7,8 @@ from repro.graph import CSRGraph, paper_example_graph, chung_lu, erdos_renyi
 from repro.core.imcore import imcore_bz
 from repro.core.maintenance import CoreMaintainer
 from repro.core.semicore import HostEngine
+from repro.core.update import UpdateBatch
+from repro.runtime import Settings as RuntimeSettings
 
 
 def fresh_maintainer():
@@ -148,7 +150,9 @@ def test_maintenance_cheaper_than_recompute():
 def test_apply_batch_settled_backend_matches_recompute(backend):
     """Non-numpy backends ingest a micro-batch through one warm-started
     SemiCore* batch settle; (core, cnt) must equal recompute-from-scratch
-    after every batch (DESIGN.md §11)."""
+    after every batch (DESIGN.md §11).  Pins ``parallel_maint=False``: this
+    test covers the serial batch-settle path specifically (the parallel
+    grouped settle has its own battery in test_parallel_maint.py)."""
     g = chung_lu(250, 1000, seed=13)
     e = g.edge_list()
     rng = np.random.default_rng(3)
@@ -160,11 +164,12 @@ def test_apply_batch_settled_backend_matches_recompute(backend):
         if u != v and (u, v) not in present:
             ins.append((u, v))
             present.add((u, v))
-    m = CoreMaintainer(g, block_edges=64, backend=backend)
+    serial = RuntimeSettings(backend=backend, parallel_maint=False)
+    m = CoreMaintainer(g, block_edges=64, settings=serial)
     ref = CoreMaintainer(g, block_edges=64)  # numpy per-edge reference
     for batch_d, batch_i in ((dels[:6], ins[:4]), (dels[6:], ins[4:])):
-        s = m.apply_batch(batch_d, batch_i)
-        ref.apply_batch(batch_d, batch_i)
+        s = m.apply(UpdateBatch.from_pairs(batch_d, batch_i))
+        ref.apply(UpdateBatch.from_pairs(batch_d, batch_i))
         assert s.algorithm == f"batch-settle({backend})"
         assert s.num_deletes == 6 and s.num_inserts == 4
         final = m.bg.materialize()

@@ -20,8 +20,8 @@ from repro.faults import (CircuitBreaker, FaultInjected, FaultPlan, FaultRule,
 from repro.graph import chung_lu
 from repro.obs.metrics import counter
 from repro.stream import (CoreReplica, CoreWriter, CorruptionError,
-                          Overloaded, SnapshotStore, WalTailer, WriteAheadLog,
-                          crc32c, mixed_stream)
+                          Overloaded, SnapshotStore, UpdateBatch, WalTailer,
+                          WriteAheadLog, crc32c, mixed_stream)
 from repro.stream.integrity import frame_record, is_framed, unframe
 
 
@@ -42,7 +42,7 @@ def framed_wal(path, n):
     """A WAL of n framed records, epochs 1..n, one insert each."""
     w = WriteAheadLog(path)
     for e in range(1, n + 1):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     w.close()
 
 
@@ -119,7 +119,7 @@ def test_injected_faults_are_visible_in_the_metric(tmp_path):
     w = WriteAheadLog(str(tmp_path / "wal.log"))
     with inject(plan):
         with pytest.raises(FaultInjected) as ei:
-            w.append(1, [], [(0, 1)])
+            w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
     w.close()
     assert (ei.value.op, ei.value.kind, ei.value.index) == \
         ("wal.append", "io_error", 1)
@@ -161,7 +161,7 @@ def test_bitflip_matrix_replay(tmp_path, k):
     framed_wal(wal, N_RECORDS)
     off = flip_record(wal, k)
     if k == N_RECORDS - 1:
-        got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+        got = [e for e, _ in WriteAheadLog.replay(wal)]
         assert got == list(range(1, N_RECORDS))
     else:
         with pytest.raises(CorruptionError) as ei:
@@ -216,9 +216,9 @@ def test_corrupt_final_record_truncated_on_reopen(tmp_path):
     framed_wal(wal, N_RECORDS)
     flip_record(wal, N_RECORDS - 1)
     w = WriteAheadLog(wal)  # reopen drops the unacknowledged corrupt tail
-    w.append(N_RECORDS, [], [(1, 2)])
+    w.append(N_RECORDS, UpdateBatch.from_pairs([], [(1, 2)]))
     w.close()
-    got = [(e, ins) for e, _, ins in WriteAheadLog.replay(wal)]
+    got = [(e, b.inserts) for e, b in WriteAheadLog.replay(wal)]
     assert [e for e, _ in got] == list(range(1, N_RECORDS + 1))
     assert got[-1][1] == [(1, 2)]
 
@@ -234,7 +234,7 @@ def test_rotation_repairs_interior_corruption(tmp_path):
     w.close()
     assert w.repaired == 1
     assert fam.value - before == 1
-    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    got = [e for e, _ in WriteAheadLog.replay(wal)]
     assert got == [1, 2, 4, 5]  # epoch 3 was unrecoverable
 
 
@@ -244,9 +244,9 @@ def test_legacy_unframed_wal_still_replays(tmp_path):
         f.write('{"epoch": 1, "del": [], "ins": [[0, 1]]}\n')
         f.write('{"epoch": 2, "del": [[0, 1]], "ins": []}\n')
     w = WriteAheadLog(wal)  # appends framed records after legacy ones
-    w.append(3, [], [(2, 3)])
+    w.append(3, UpdateBatch.from_pairs([], [(2, 3)]))
     w.close()
-    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    got = [e for e, _ in WriteAheadLog.replay(wal)]
     assert got == [1, 2, 3]
     # the tailer types legacy corruption too (wrapped, cursor pinned)
     with open(wal, "r+") as f:
@@ -269,21 +269,21 @@ def test_rotation_reframes_legacy_records(tmp_path):
     with open(wal, "rb") as f:
         lines = f.readlines()
     assert len(lines) == 1 and is_framed(lines[0])
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [2]
+    assert [e for e, _ in WriteAheadLog.replay(wal)] == [2]
 
 
 def test_torn_append_self_heals_for_retry(tmp_path):
     wal = str(tmp_path / "wal.log")
     w = WriteAheadLog(wal)
-    w.append(1, [], [(0, 1)])
+    w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
     plan = FaultPlan([FaultRule("wal.append", "torn_write", nth=1, arg=0.5)])
     with inject(plan):
         with pytest.raises(FaultInjected):
-            w.append(2, [], [(2, 3)])
-        w.append(2, [], [(2, 3)])  # retry lands on a clean offset
+            w.append(2, UpdateBatch.from_pairs([], [(2, 3)]))
+        w.append(2, UpdateBatch.from_pairs([], [(2, 3)]))  # retry lands on a clean offset
     w.close()
     assert plan.total_injected == 1
-    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    got = [e for e, _ in WriteAheadLog.replay(wal)]
     assert got == [1, 2]  # no torn fragment, no duplicate
 
 
@@ -397,7 +397,7 @@ def test_wal_rotation_needs_the_directory_fsync(tmp_path):
         w.rotate(2)
         w.close()
         simulate_power_loss()
-    got = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    got = [e for e, _ in WriteAheadLog.replay(wal)]
     assert got == [3, 4]  # the rotation survived the crash
 
 
@@ -509,7 +509,7 @@ def test_writer_recover_truncates_at_interior_corruption(tmp_path):
     w2, _rs = CoreService.recover(wal_path=wal, snapshot_dir=snaps,
                                   block_edges=128)
     assert w2.epoch == 3  # the intact prefix, nothing past the corruption
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2, 3]
+    assert [e for e, _ in WriteAheadLog.replay(wal)] == [1, 2, 3]
 
     expect, _, _ = make_writer(tmp_path / "expect")
     for b in all_batches[:3]:

@@ -361,25 +361,40 @@ def test_watermarked_arrays_stay_readonly_and_equal():
 
 
 # ===================================================== maintenance metrics
-def test_maintenance_settle_histogram_both_paths():
-    from repro.core.maintenance import CoreMaintainer
+def test_maintenance_settle_histogram_all_paths():
+    from repro.core.maintenance import CoreMaintainer, UpdateBatch
+    from repro.runtime import Settings
 
-    m = CoreMaintainer(paper_example_graph())
+    serial = Settings(parallel_maint=False)
+    m = CoreMaintainer(paper_example_graph(), settings=serial)
     snap = get_registry().snapshot()
-    m.apply_batch([(0, 1)], [(0, 1)])
+    m.apply(UpdateBatch.from_pairs([(0, 1)], [(0, 1)]))
     d = get_registry().delta(snap)
     assert d.get('repro_maintenance_batches_total{path="per-edge"}') == 1
     assert d.get(
         'repro_maintenance_updates_applied_total{path="per-edge"}') == 2
 
-    mx = CoreMaintainer(paper_example_graph(), backend="xla")
+    mx = CoreMaintainer(paper_example_graph(),
+                        settings=Settings(backend="xla",
+                                          parallel_maint=False))
     snap = get_registry().snapshot()
-    mx.apply_batch([(0, 1)], [(0, 1)])
+    mx.apply(UpdateBatch.from_pairs([(0, 1)], [(0, 1)]))
     d = get_registry().delta(snap)
     assert d.get('repro_maintenance_batches_total{path="batch-settle"}') == 1
     assert sum_by_name(d, "repro_maintenance_settle_seconds_count") == 1
     # the batch-settle path pays the exact-cnt prologue, and it is timed
     assert sum_by_name(d, "repro_maintenance_cnt_prologue_seconds_count") >= 1
+
+    # default dispatch: the parallel grouped settle, with its own series
+    mp = CoreMaintainer(paper_example_graph(), backend="xla")
+    snap = get_registry().snapshot()
+    mp.apply(UpdateBatch.from_pairs([(0, 1)], [(0, 1)]))
+    d = get_registry().delta(snap)
+    assert d.get('repro_maintenance_batches_total{path="parallel"}') == 1
+    assert d.get(
+        'repro_maintenance_updates_applied_total{path="parallel"}') == 2
+    # one grouped settle ran (rounds histogram observes once per batch)
+    assert sum_by_name(d, "repro_maintenance_settle_rounds_count") == 1
 
 
 # ============================================================ bench schema

@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.graph import chung_lu
-from repro.stream import (CoreReplica, CoreService, WalGap, WalTailer,
-                          WriteAheadLog, admit_batch, mixed_stream)
+from repro.stream import (CoreReplica, CoreService, UpdateBatch, WalGap,
+                          WalTailer, WriteAheadLog, admit_batch,
+                          mixed_stream)
 
 
 def batches(ops, size):
@@ -44,31 +45,31 @@ def assert_converged(rep, svc):
 def test_tailer_yields_only_new_complete_records(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
-    w.append(1, [(0, 1)], [])
-    w.append(2, [], [(2, 3)])
+    w.append(1, UpdateBatch.from_pairs([(0, 1)], []))
+    w.append(2, UpdateBatch.from_pairs([], [(2, 3)]))
     t = WalTailer(wal)
-    assert [e for e, _, _ in t.poll()] == [1, 2]
+    assert [e for e, _ in t.poll()] == [1, 2]
     assert list(t.poll()) == []  # nothing new
-    w.append(3, [(4, 5)], [(6, 7)])
+    w.append(3, UpdateBatch.from_pairs([(4, 5)], [(6, 7)]))
     got = list(t.poll())
-    assert got == [(3, [(4, 5)], [(6, 7)])]
+    assert got == [(3, UpdateBatch.from_pairs([(4, 5)], [(6, 7)]))]
     w.close()
 
 
 def test_tailer_leaves_inflight_tail_for_next_poll(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
-    w.append(1, [], [(0, 1)])
+    w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
     w.close()
     with open(wal, "a") as f:  # writer mid-append: no trailing newline yet
         f.write('{"epoch":2,"del":[],"ins":[[2,')
     t = WalTailer(wal)
-    assert [e for e, _, _ in t.poll()] == [1]
+    assert [e for e, _ in t.poll()] == [1]
     off = t.offset
     assert list(t.poll()) == []  # partial line is not durable
     with open(wal, "a") as f:  # the append completes
         f.write('3]]}\n')
-    assert [e for e, _, _ in t.poll()] == [2]
+    assert [e for e, _ in t.poll()] == [2]
     assert t.offset > off
 
 
@@ -76,22 +77,22 @@ def test_tailer_resumes_from_after_epoch(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 6):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     w.close()
     t = WalTailer(wal, after_epoch=3)
-    assert [e for e, _, _ in t.poll()] == [4, 5]
+    assert [e for e, _ in t.poll()] == [4, 5]
 
 
 def test_tailer_detects_rotation_and_reseeks_without_duplicates(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 5):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     t = WalTailer(wal)
-    assert [e for e, _, _ in t.poll()] == [1, 2, 3, 4]
+    assert [e for e, _ in t.poll()] == [1, 2, 3, 4]
     assert w.rotate(after_epoch=3) == 3  # epochs 1-3 dropped
-    w.append(5, [], [(0, 5)])
-    got = [e for e, _, _ in t.poll()]
+    w.append(5, UpdateBatch.from_pairs([], [(0, 5)]))
+    got = [e for e, _ in t.poll()]
     assert got == [5]  # epoch 4 survived rotation but was already applied
     assert t.rotations_detected == 1
     w.close()
@@ -101,11 +102,11 @@ def test_tailer_raises_walgap_when_rotation_outran_it(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 4):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     t = WalTailer(wal)
-    assert [e for e, _, _ in t.poll()] == [1, 2, 3]
+    assert [e for e, _ in t.poll()] == [1, 2, 3]
     for e in range(4, 8):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     w.rotate(after_epoch=6)  # drops 1..6; tailer needs 4 next
     with pytest.raises(WalGap):
         list(t.poll())
@@ -116,26 +117,26 @@ def test_rotate_is_atomic_and_appends_keep_working(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 6):
-        w.append(e, [(e, e + 1)], [])
+        w.append(e, UpdateBatch.from_pairs([(e, e + 1)], []))
     w.rotate(after_epoch=4)
-    w.append(6, [], [(9, 10)])  # handle was reopened onto the new inode
+    w.append(6, UpdateBatch.from_pairs([], [(9, 10)]))  # handle was reopened onto the new inode
     w.close()
     got = list(WriteAheadLog.replay(wal))
-    assert [e for e, _, _ in got] == [5, 6]
+    assert [e for e, _ in got] == [5, 6]
     assert not os.path.exists(wal + WriteAheadLog.ROTATE_TMP_SUFFIX)
 
 
 def test_stale_rotate_tmp_is_discarded_on_reopen(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
-    w.append(1, [], [(0, 1)])
+    w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
     w.close()
     tmp = wal + WriteAheadLog.ROTATE_TMP_SUFFIX
     with open(tmp, "w") as f:  # crash mid-rotation: os.replace never ran
         f.write('{"epoch":1,"del"')
     w2 = WriteAheadLog(wal)
     assert not os.path.exists(tmp)
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1]
+    assert [e for e, _ in WriteAheadLog.replay(wal)] == [1]
     w2.close()
 
 
@@ -144,7 +145,7 @@ def test_replay_is_a_lazy_generator(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 100):
-        w.append(e, [], [(0, e)])
+        w.append(e, UpdateBatch.from_pairs([], [(0, e)]))
     w.close()
     it = WriteAheadLog.replay(wal)
     assert next(it)[0] == 1  # consuming one record doesn't parse the rest
@@ -154,12 +155,12 @@ def test_replay_is_a_lazy_generator(tmp_path):
 def test_replay_rejects_mid_log_corruption_but_skips_torn_tail(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
-    w.append(1, [], [(0, 1)])
-    w.append(2, [], [(0, 2)])
+    w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
+    w.append(2, UpdateBatch.from_pairs([], [(0, 2)]))
     w.close()
     with open(wal, "a") as f:
         f.write('{"epoch":3,"del":[[1,')  # torn tail: skipped
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2]
+    assert [e for e, _ in WriteAheadLog.replay(wal)] == [1, 2]
     with open(wal) as f:
         lines = f.readlines()
     lines[0] = '{"epoch":1,"del":[[corrupt\n'  # mid-log damage: must raise
@@ -172,15 +173,15 @@ def test_replay_rejects_mid_log_corruption_but_skips_torn_tail(tmp_path):
 def test_truncate_torn_tail_streams_from_the_end(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
-    w.append(1, [], [(0, 1)])
+    w.append(1, UpdateBatch.from_pairs([], [(0, 1)]))
     w.close()
     torn = '{"epoch":2,"pad":"' + "x" * 300_000  # torn line > scan chunk
     with open(wal, "a") as f:
         f.write(torn)
     w2 = WriteAheadLog(wal)  # reopen truncates the torn line
-    w2.append(2, [], [(0, 2)])
+    w2.append(2, UpdateBatch.from_pairs([], [(0, 2)]))
     w2.close()
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)] == [1, 2]
+    assert [e for e, _ in WriteAheadLog.replay(wal)] == [1, 2]
 
 
 def test_replay_and_truncate_memory_is_o_record_not_o_log(tmp_path):
@@ -190,16 +191,15 @@ def test_replay_and_truncate_memory_is_o_record_not_o_log(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 2_001):
-        w.append(e, [(i, i + 1) for i in range(300)],
-                 [(i, i + 2) for i in range(300)])
+        w.append(e, UpdateBatch.from_pairs([(i, i + 1) for i in range(300)], [(i, i + 2) for i in range(300)]))
     w.close()
     log_bytes = os.path.getsize(wal)
     assert log_bytes > 8_000_000
 
     tracemalloc.start()
     count = 0
-    for _e, dels, ins in WriteAheadLog.replay(wal):
-        count += len(dels) + len(ins)
+    for _e, batch in WriteAheadLog.replay(wal):
+        count += len(batch)
     _, peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     assert count == 2_000 * 600
@@ -212,7 +212,7 @@ def test_replay_and_truncate_memory_is_o_record_not_o_log(tmp_path):
     _, peak = tracemalloc.get_traced_memory()
     tracemalloc.stop()
     assert peak < 1_000_000, f"truncate peak {peak} vs log {log_bytes}"
-    assert [e for e, _, _ in WriteAheadLog.replay(wal)][-1] == 2_000
+    assert [e for e, _ in WriteAheadLog.replay(wal)][-1] == 2_000
 
     tracemalloc.start()
     assert WriteAheadLog.tip_epoch(wal) == 2_000
@@ -246,7 +246,7 @@ def test_wal_stays_bounded_by_rotation_under_snapshots(tmp_path):
     for chunk in batches(ops, 30):  # 12 batches, snapshots at 3,6,9,12
         svc.ingest(chunk)
     svc.close()
-    records = [e for e, _, _ in WriteAheadLog.replay(wal)]
+    records = [e for e, _ in WriteAheadLog.replay(wal)]
     assert records == []  # epoch 12 snapshot just rotated everything out
     assert svc.wal.rotations == 4
 
@@ -402,15 +402,15 @@ def test_fault_kill_between_wal_append_and_apply(tmp_path):
     # durable (and acknowledged by the log) but the state never advanced
     admitted = admit_batch(
         mixed_stream(svc.bg.materialize(), 30, seed=22)[0], n=svc.bg.n)
-    svc.wal.append(svc.epoch + 1, admitted.deletes, admitted.inserts)
+    svc.wal.append(svc.epoch + 1, admitted.batch)
     svc.close()
     svc2, rep, rs = _recover_and_replicate(wal, snaps)
     assert svc2.epoch == svc.epoch + 1  # the logged batch was replayed
     assert rs.replayed_batches == 5
     # recovery's state is exact: it equals re-applying the batch on the
     # pre-crash writer through the normal ingest path
-    svc.maintainer.apply_batch(admitted.deletes, admitted.inserts,
-                               svc.insert_algorithm)
+    svc.maintainer.apply(admitted.batch,
+                         insert_algorithm=svc.insert_algorithm)
     np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
     np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
 
@@ -452,14 +452,14 @@ def test_fault_multi_record_torn_tail(tmp_path):
     # one must not
     admitted = admit_batch(
         mixed_stream(svc.bg.materialize(), 30, seed=23)[0], n=svc.bg.n)
-    svc.wal.append(svc.epoch + 1, admitted.deletes, admitted.inserts)
+    svc.wal.append(svc.epoch + 1, admitted.batch)
     svc.close()
     with open(wal, "a") as f:
         f.write('{"epoch":%d,"del":[[1,2],[3' % (svc.epoch + 2))
     svc2, rep, rs = _recover_and_replicate(wal, snaps)
     assert svc2.epoch == svc.epoch + 1 and rs.replayed_batches == 5
-    svc.maintainer.apply_batch(admitted.deletes, admitted.inserts,
-                               svc.insert_algorithm)
+    svc.maintainer.apply(admitted.batch,
+                         insert_algorithm=svc.insert_algorithm)
     np.testing.assert_array_equal(svc2.maintainer.core, svc.maintainer.core)
     np.testing.assert_array_equal(svc2.maintainer.cnt, svc.maintainer.cnt)
 
@@ -475,7 +475,7 @@ def test_fault_matrix_replica_converges_under_every_cell(tmp_path):
 
     cells = {
         "append-no-apply": lambda svc, wal, snaps: svc.wal.append(
-            svc.epoch + 1, [], []),
+            svc.epoch + 1, UpdateBatch.from_pairs([], [])),
         "snap-tmp": lambda svc, wal, snaps: os.makedirs(
             os.path.join(snaps, ".snap_tmp")),
         "rotate-tmp": lambda svc, wal, snaps: open(

@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import decompose, imcore_bz
 from repro.graph import chung_lu, paper_example_graph
-from repro.stream import CoreService, WriteAheadLog, admit_batch, mixed_stream
+from repro.stream import (CoreService, UpdateBatch, WriteAheadLog,
+                          admit_batch, mixed_stream)
 
 make_stream = mixed_stream  # shared generator: repro.stream.workload
 
@@ -270,11 +271,12 @@ def test_wal_replay_filters_already_snapshotted_epochs(tmp_path):
     wal = str(tmp_path / "wal.jsonl")
     w = WriteAheadLog(wal)
     for e in range(1, 5):
-        w.append(e, [(0, e)], [(e, e + 1)])
+        w.append(e, UpdateBatch.from_pairs([(0, e)], [(e, e + 1)]))
     w.close()
     got = list(WriteAheadLog.replay(wal, after_epoch=2))
-    assert [e for e, _, _ in got] == [3, 4]
-    assert got[0][1] == [(0, 3)] and got[0][2] == [(3, 4)]
+    assert [e for e, _ in got] == [3, 4]
+    assert got[0][1].deletes == [(0, 3)]
+    assert got[0][1].inserts == [(3, 4)]
 
 
 # ========================================================== integration bits
